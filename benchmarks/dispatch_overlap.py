@@ -1,0 +1,86 @@
+"""Wall-clock benchmark: sequential vs concurrent configuration on the real
+JAX runtime (§2.2 / §5.5 at the dispatch layer).
+
+The device step is a jitted matmul chain; host 'configuration' packs a
+descriptor (NumPy bit-twiddling — Eq. 4's T_calc). Sequential blocks per
+launch; concurrent lets JAX's async dispatch queue stage the next launch.
+Measured on the CPU device — the *relative* gap is the paper's point.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dispatch import ConcurrentExecutor, ConfigPlan, SequentialExecutor, StepDescriptor
+
+
+def make_device_fn(n: int = 512, depth: int = 2):
+    @jax.jit
+    def device_fn(state, args):
+        x = state
+        for _ in range(depth):
+            x = jnp.tanh(x @ state) + args["bias"]
+        return x / jnp.linalg.norm(x)
+
+    return device_fn
+
+
+def make_host_prep(n: int = 512, calc_us: int = 4000):
+    def host_prep(step):
+        # descriptor calculation (T_calc). Modeled as a blocking wait rather
+        # than a spin so that, on a single-core container where the CPU
+        # "device" shares the core with the host thread, overlap remains
+        # observable — on a real TPU host the device computes regardless.
+        time.sleep(calc_us / 1e6)
+        acc = (np.uint64(step) << np.uint64(16)) | np.uint64(step % 7)
+        return {"bias": jnp.float32(float(acc % 97) * 1e-4)}
+
+    return host_prep
+
+
+def run(n_steps: int = 30, n: int = 512) -> dict:
+    device_fn = make_device_fn(n)
+    host_prep = make_host_prep(n)
+    state = jnp.eye(n) * 0.5 + 0.01
+    jax.block_until_ready(device_fn(state, host_prep(0)))  # warmup
+
+    _, seq = SequentialExecutor(device_fn, host_prep).run(state, n_steps)
+    _, conc = ConcurrentExecutor(device_fn, host_prep, depth=2).run(state, n_steps)
+
+    # descriptor dedup accounting on a serving-like descriptor
+    descs = [
+        StepDescriptor({
+            "pos": i,
+            "temperature": 0.7,
+            "top_k": 40,
+            "cache_layout": np.arange(64, dtype=np.int32),
+            "rng": np.uint64(1234),
+        })
+        for i in range(8)
+    ]
+    plan = ConfigPlan.trace(descs)
+
+    return {
+        "sequential_s": seq.wall_s,
+        "concurrent_s": conc.wall_s,
+        "overlap_speedup": seq.wall_s / conc.wall_s,
+        "host_prep_s": seq.host_prep_s,
+        "dedup_bytes_baseline": plan.bytes_baseline(descs[0]),
+        "dedup_bytes_dynamic": plan.bytes_deduped(descs[0]),
+        "dedup_i_oc_gain": plan.i_oc_gain(descs[0]),
+    }
+
+
+def main() -> None:
+    r = run()
+    print("# dispatch overlap (sequential vs concurrent configuration)")
+    for k, v in r.items():
+        print(f"{k},{v:.4f}" if isinstance(v, float) else f"{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one entry per paper table/figure plus the
+framework-level configuration-wall benchmarks.
+
+Prints ``name,us_per_call,derived`` CSV lines (us_per_call is simulated
+cycles for the paper-figure benches, wall-clock microseconds for the runtime
+benches; ``derived`` is the headline metric of that table).
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import decode_config_wall, dispatch_overlap, paper_figures
+
+    print("name,us_per_call,derived")
+
+    # Figure 10 — Gemmini sequential-configuration sweep
+    rows, g = paper_figures.gemmini_sweep()
+    for r in rows:
+        print(f"fig10_gemmini_k{r['size']},{r['base_cycles']:.0f},"
+              f"speedup={r['speedup']:.3f}")
+    print(f"fig10_gemmini_geomean,0,geomean={g:.3f}(paper=1.105)")
+
+    # Figure 11 — OpenGeMM concurrent-configuration sweep
+    rows, geo = paper_figures.opengemm_sweep()
+    for r in rows:
+        print(f"fig11_opengemm_k{r['size']},{r['base_cycles']:.0f},"
+              f"both={r['both_speedup']:.3f}")
+    print(f"fig11_opengemm_geomean,0,geomean={geo['both']:.3f}(paper=1.99)")
+
+    # Figure 12 — roofline placement
+    for r in paper_figures.roofline_placement(sizes=(64, 128)):
+        print(f"fig12_place_k{r['size']}_{r['level']},"
+              f"{r['perf_ops_per_cycle']:.1f},i_oc={r['i_oc']:.1f};{r['bound']}")
+
+    # §4.6 worked example
+    from repro.core import roofline as rl
+    _, _, util_t = rl.gemmini_example_theoretical()
+    _, _, util_e = rl.gemmini_example_effective()
+    print(f"sec4.6_worked_theoretical,0,util={util_t*100:.2f}%(paper=41.49%)")
+    print(f"sec4.6_worked_effective,0,util={util_e*100:.2f}%(paper=26.78%)")
+
+    # dispatch overlap (wall clock, real runtime)
+    r = dispatch_overlap.run(n_steps=20)
+    print(f"dispatch_sequential,{r['sequential_s']/20*1e6:.0f},steps=20")
+    print(f"dispatch_concurrent,{r['concurrent_s']/20*1e6:.0f},"
+          f"overlap_speedup={r['overlap_speedup']:.2f}")
+    print(f"dispatch_dedup,0,i_oc_gain={r['dedup_i_oc_gain']:.1f}x"
+          f"({r['dedup_bytes_baseline']}B->{r['dedup_bytes_dynamic']}B)")
+
+    # decode config wall (tokens per launch)
+    for row in decode_config_wall.run(total_tokens=32, fuse_levels=(1, 4, 16)):
+        print(f"decode_wall_k{row['tokens_per_launch']},"
+              f"{row['us_per_token']:.1f},tok_per_s={row['tok_per_s']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

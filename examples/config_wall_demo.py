@@ -1,0 +1,39 @@
+"""The configuration wall, end to end: from the paper's simulated
+accelerators to a live JAX serving loop.
+
+1. §4.6 worked example — Gemmini's output-stationary matmul is configuration
+   bound at 41.5% (theoretical) / 26.7% (effective BW) of peak.
+2. Figure 11 — compiler passes buy ~2× on the concurrent-configuration
+   target.
+3. The same wall on a real runtime — single-token decode throughput vs
+   tokens-per-launch (configuration hoisting raises I_OC k× and climbs the
+   roofline).
+
+    PYTHONPATH=src:. python examples/config_wall_demo.py
+"""
+
+from benchmarks import decode_config_wall, paper_figures
+from repro.core import roofline as rl
+
+print("=== 1. the wall, analytically (paper §4.6) ===")
+bw_t, i_oc, util_t = rl.gemmini_example_theoretical()
+bw_e, _, util_e = rl.gemmini_example_effective()
+print(f"BW_config = {bw_t:.2f} B/cycle, I_OC = {i_oc:.1f} ops/B "
+      f"-> {util_t*100:.1f}% of peak (paper: 41.49%)")
+print(f"BW_eff    = {bw_e:.2f} B/cycle (bit-packing tax, Eq. 4) "
+      f"-> {util_e*100:.1f}% of peak (paper: 26.78%)")
+
+print("\n=== 2. the wall, eliminated by the compiler (Fig. 11) ===")
+rows, geo = paper_figures.opengemm_sweep(sizes=(32, 64, 128))
+for r in rows:
+    print(f"K={r['size']:4d}: dedup {r['dedup_speedup']:.2f}x, "
+          f"overlap {r['overlap_speedup']:.2f}x, both {r['both_speedup']:.2f}x")
+print(f"geomean(both) = {geo['both']:.2f}x (paper: 1.99x)")
+
+print("\n=== 3. the wall, live on the JAX runtime (decode) ===")
+print("tokens/launch   us/token   tok/s")
+for r in decode_config_wall.run(total_tokens=32, fuse_levels=(1, 4, 16)):
+    print(f"{r['tokens_per_launch']:13d} {r['us_per_token']:10.1f} "
+          f"{r['tok_per_s']:7.0f}")
+print("\nFusing k steps into one launch amortizes one configuration over k")
+print("macro-ops — I_OC rises x k, throughput climbs toward the compute roof.")

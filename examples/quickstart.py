@@ -1,0 +1,40 @@
+"""Quickstart: the configuration wall in 60 seconds.
+
+Builds the paper's tiled-matmul workload as accfg IR, runs the optimization
+pipeline (state tracing → dedup → overlap), executes both versions on the
+cycle-approximate OpenGeMM model, and places the measurements on the
+configuration roofline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import accelerators, evaluate_levels, ir, matmul_driver, speedup, timeline
+from repro.core.roofline import knee_point
+
+K = 64
+models = {"opengemm": accelerators.opengemm_like()}
+
+print(f"=== tiled {K}x{K}x{K} int8 matmul on an OpenGeMM-class accelerator ===\n")
+
+module = matmul_driver.opengemm_tiled_matmul(K)
+print("Raw accfg IR (first tile's configuration):")
+print("\n".join(ir.print_module(module).splitlines()[:26]))
+
+results = evaluate_levels(lambda: matmul_driver.opengemm_tiled_matmul(K), models)
+
+print(f"\n{'level':10s} {'cycles':>10s} {'ops/cycle':>10s} {'I_OC':>8s} {'bound':>14s}")
+for level, r in results.items():
+    p = r.point
+    print(f"{level:10s} {r.trace.total_cycles:10.0f} {p.performance:10.1f} "
+          f"{p.i_oc:8.1f} {p.bound:>14s}")
+
+print("\nFigure-2 timelines ('#' accelerator busy, '.' idle while configuring):")
+print(timeline.compare({lvl: r.trace for lvl, r in results.items()}, width=64))
+
+acc = models["opengemm"]
+print(f"\nknee point I_OC = {knee_point(acc.p_peak, acc.bw_config):.1f} ops/byte")
+print(f"dedup speedup   = {speedup(results, 'dedup'):.2f}x")
+print(f"overlap speedup = {speedup(results, 'overlap'):.2f}x")
+print(f"both            = {speedup(results, 'both'):.2f}x   (paper: ~2x geomean)")
+print("\nInvocation logs verified identical across all levels — the optimized")
+print("programs configure the accelerator to exactly the same register states.")

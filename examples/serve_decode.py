@@ -1,0 +1,24 @@
+"""Batched serving example: the configuration wall at the dispatch layer.
+
+Runs the same decode workload three ways and prints the throughput ladder:
+
+  sequential   block per token, full descriptor per launch   (the wall)
+  concurrent   async dispatch + deduped descriptors          (overlap+dedup)
+  fused        k tokens per launch via on-device loop        (config hoisting)
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch qwen2-0.5b]
+"""
+
+import subprocess
+import sys
+
+arch = "qwen2-0.5b"
+if "--arch" in sys.argv:
+    arch = sys.argv[sys.argv.index("--arch") + 1]
+
+for mode in ("sequential", "concurrent", "fused"):
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+         "--reduced", "--batch", "4", "--steps", "48", "--mode", mode],
+        check=True,
+    )

@@ -1,0 +1,24 @@
+"""End-to-end driver: train the ~100M-parameter LM for a few hundred steps
+with the full substrate — prefetching data pipeline, donated jitted train
+step, async checkpoints, fault-tolerant supervisor.
+
+    PYTHONPATH=src python examples/train_lm.py            # full (~100M, 300 steps)
+    PYTHONPATH=src python examples/train_lm.py --quick    # CI-sized
+
+Equivalent to: python -m repro.launch.train --arch paper-lm-100m ...
+"""
+
+import sys
+
+sys.argv = [sys.argv[0]] + (
+    ["--arch", "paper-lm-100m", "--steps", "20", "--batch", "2", "--seq", "64",
+     "--reduced", "--ckpt-dir", "/tmp/repro_ckpt_quick"]
+    if "--quick" in sys.argv[1:]
+    else ["--arch", "paper-lm-100m", "--steps", "300", "--batch", "4",
+          "--seq", "256", "--ckpt-dir", "/tmp/repro_ckpt",
+          "--ckpt-every", "50"]
+)
+
+from repro.launch.train import main
+
+main()

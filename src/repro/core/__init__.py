@@ -1,0 +1,60 @@
+"""repro.core — the paper's contribution: the accfg abstraction, its
+optimization passes, the configuration roofline model, and the
+cycle-approximate evaluation substrate."""
+
+from . import (
+    accelerators,
+    builder,
+    evaluate,
+    interp,
+    ir,
+    lowering,
+    matmul_driver,
+    passes,
+    roofline,
+    timeline,
+)
+from .accelerators import AcceleratorModel, gemmini_like, opengemm_like
+from .builder import Builder
+from .evaluate import evaluate as evaluate_levels
+from .evaluate import geomean, speedup
+from .interp import Trace, run
+from .ir import Module
+from .roofline import (
+    RooflinePoint,
+    concurrent_config_roofline,
+    config_bound,
+    effective_config_bandwidth,
+    knee_point,
+    processor_roofline,
+    roofsurface,
+    sequential_config_roofline,
+)
+
+__all__ = [
+    "AcceleratorModel",
+    "Builder",
+    "Module",
+    "RooflinePoint",
+    "Trace",
+    "accelerators",
+    "builder",
+    "concurrent_config_roofline",
+    "config_bound",
+    "effective_config_bandwidth",
+    "evaluate",
+    "evaluate_levels",
+    "geomean",
+    "gemmini_like",
+    "interp",
+    "ir",
+    "knee_point",
+    "matmul_driver",
+    "opengemm_like",
+    "passes",
+    "processor_roofline",
+    "roofsurface",
+    "run",
+    "sequential_config_roofline",
+    "speedup",
+]

@@ -1,0 +1,125 @@
+"""The Configuration Roofline Model (§4, Eqs. 1–5).
+
+Implements, verbatim:
+
+* Eq. 1 — classical processor roofline: ``min(P_peak, BW_mem × I_op)``.
+* Eq. 2 — concurrent configuration roofline: ``min(P_peak, BW_cfg × I_OC)``.
+* Eq. 3 — sequential configuration roofline (harmonic composition):
+  ``1 / (1/P_peak + 1/(BW_cfg × I_OC))``.
+* Eq. 4 — effective configuration bandwidth:
+  ``N_cfg_bytes / (T_calc + T_set)``.
+* Eq. 5 — the combined "roofsurface":
+  ``min(P_peak, BW_mem × I_op, BW_cfg × I_OC)``.
+
+Also ships the §4.6 Gemmini worked example as executable constants, which the
+test suite asserts against the paper's published 41.49% / 26.78% utilization
+numbers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+def processor_roofline(p_peak: float, bw_mem: float, i_op: float) -> float:
+    """Eq. 1 — attainable performance under the classical roofline."""
+    return min(p_peak, bw_mem * i_op)
+
+
+def concurrent_config_roofline(p_peak: float, bw_config: float, i_oc: float) -> float:
+    """Eq. 2 — attainable performance with concurrent configuration."""
+    return min(p_peak, bw_config * i_oc)
+
+
+def sequential_config_roofline(p_peak: float, bw_config: float, i_oc: float) -> float:
+    """Eq. 3 — attainable performance with sequential configuration."""
+    if i_oc == float("inf"):
+        return p_peak
+    return 1.0 / (1.0 / p_peak + 1.0 / (bw_config * i_oc))
+
+
+def effective_config_bandwidth(n_config_bytes: float, t_calc: float, t_set: float) -> float:
+    """Eq. 4 — configuration bandwidth degraded by parameter calculation."""
+    return n_config_bytes / (t_calc + t_set)
+
+
+def roofsurface(
+    p_peak: float, bw_mem: float, i_op: float, bw_config: float, i_oc: float
+) -> float:
+    """Eq. 5 — the combined processor + configuration roofline."""
+    return min(p_peak, bw_mem * i_op, bw_config * i_oc)
+
+
+def config_bound(p_peak: float, bw_config: float, i_oc: float) -> bool:
+    """A workload is configuration-bound when the config term minimizes Eq. 2
+    — i.e. it sits left of the knee point (§4.2)."""
+    return bw_config * i_oc < p_peak
+
+
+def knee_point(p_peak: float, bw_config: float) -> float:
+    """The I_OC at which configuration and computation take equal time."""
+    return p_peak / bw_config
+
+
+@dataclass(frozen=True)
+class RooflinePoint:
+    """One measurement on the configuration roofline plot (Figure 12)."""
+
+    name: str
+    i_oc: float
+    performance: float  # ops/cycle
+    p_peak: float
+    bw_config: float
+
+    @property
+    def bound(self) -> str:
+        return "configuration" if config_bound(self.p_peak, self.bw_config, self.i_oc) else "compute"
+
+    @property
+    def attainable_sequential(self) -> float:
+        return sequential_config_roofline(self.p_peak, self.bw_config, self.i_oc)
+
+    @property
+    def attainable_concurrent(self) -> float:
+        return concurrent_config_roofline(self.p_peak, self.bw_config, self.i_oc)
+
+    @property
+    def utilization(self) -> float:
+        return self.performance / self.p_peak
+
+
+# --------------------------------------------------------------------------
+# §4.6 worked example: Gemmini output-stationary 64×64×64 matmul
+# --------------------------------------------------------------------------
+
+GEMMINI_EXAMPLE = dict(
+    total_ops=2 * 64 * 64 * 64,  # 524,288 ops
+    p_peak=16 * 16 * 2,  # 512 ops/cycle
+    rocc_bytes=16,  # bytes per RoCC custom instruction
+    instrs_per_rocc=3,  # 2 loads + 1 custom
+    cycles_per_instr=3,  # Rocket CPI from [17]
+    n_rocc_setup=160,  # traced RoCC instructions to configure
+    n_total_instrs=935,  # incl. 775 bit-packing/parameter calculation
+)
+
+
+def gemmini_example_theoretical() -> tuple[float, float, float]:
+    """Returns (BW_config, I_OC, utilization) with the theoretical bandwidth —
+    the paper derives ≈1.77 B/cycle, I_OC ≈ 204.8, utilization ≈ 41.5%."""
+    e = GEMMINI_EXAMPLE
+    bw = e["rocc_bytes"] / (e["instrs_per_rocc"] * e["cycles_per_instr"])
+    i_oc = e["total_ops"] / (e["n_rocc_setup"] * e["rocc_bytes"])
+    util = sequential_config_roofline(e["p_peak"], bw, i_oc) / e["p_peak"]
+    return bw, i_oc, util
+
+
+def gemmini_example_effective() -> tuple[float, float, float]:
+    """Returns (BW_eff, I_OC, utilization) with the *effective* bandwidth
+    (Eq. 4) — the paper reports ≈0.913 B/cycle and ≈26.78% utilization."""
+    e = GEMMINI_EXAMPLE
+    n_bytes = e["n_rocc_setup"] * e["rocc_bytes"]
+    total_cycles = e["n_total_instrs"] * e["cycles_per_instr"]
+    bw_eff = n_bytes / total_cycles
+    i_oc = e["total_ops"] / n_bytes
+    util = sequential_config_roofline(e["p_peak"], bw_eff, i_oc) / e["p_peak"]
+    return bw_eff, i_oc, util

@@ -1,0 +1,4 @@
+from .executor import ConcurrentExecutor, SequentialExecutor
+from .planner import ConfigPlan, StepDescriptor
+
+__all__ = ["ConcurrentExecutor", "ConfigPlan", "SequentialExecutor", "StepDescriptor"]

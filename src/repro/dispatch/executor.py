@@ -1,0 +1,80 @@
+"""Sequential vs concurrent launch executors — §2.2 on a real JAX runtime.
+
+* :class:`SequentialExecutor` is the paper's *sequential configuration*
+  timeline: prepare the step's configuration on the host, launch, then
+  ``block_until_ready`` before preparing the next one. Host and device take
+  turns; configuration time adds to the critical path.
+
+* :class:`ConcurrentExecutor` is *concurrent configuration*: JAX's async
+  dispatch queue plays the role of OpenGeMM's staging registers. Up to
+  ``depth`` launches stay in flight while the host prepares the next
+  configuration, hiding host time behind device time (§5.5 overlap).
+
+Both report a timeline breakdown so benchmarks can place the measurement on
+the configuration roofline (host prep time ⇒ T_calc of Eq. 4).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass
+class ExecReport:
+    wall_s: float
+    host_prep_s: float
+    steps: int
+    bytes_per_step: float
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.steps / self.wall_s if self.wall_s else 0.0
+
+
+class SequentialExecutor:
+    def __init__(self, device_fn, host_prep):
+        self.device_fn = device_fn
+        self.host_prep = host_prep
+
+    def run(self, state, n_steps: int) -> tuple[object, ExecReport]:
+        t0 = time.perf_counter()
+        prep_s = 0.0
+        nbytes = 0
+        for step in range(n_steps):
+            tp = time.perf_counter()
+            args = self.host_prep(step)
+            prep_s += time.perf_counter() - tp
+            nbytes += sum(getattr(a, "nbytes", 0) for a in jax.tree.leaves(args))
+            state = self.device_fn(state, args)
+            jax.block_until_ready(state)  # sequential: host stalls per launch
+        wall = time.perf_counter() - t0
+        return state, ExecReport(wall, prep_s, n_steps, nbytes / max(n_steps, 1))
+
+
+class ConcurrentExecutor:
+    def __init__(self, device_fn, host_prep, depth: int = 2):
+        self.device_fn = device_fn
+        self.host_prep = host_prep
+        self.depth = depth
+
+    def run(self, state, n_steps: int) -> tuple[object, ExecReport]:
+        t0 = time.perf_counter()
+        prep_s = 0.0
+        nbytes = 0
+        inflight: deque = deque()
+        for step in range(n_steps):
+            tp = time.perf_counter()
+            args = self.host_prep(step)  # overlaps the in-flight device work
+            prep_s += time.perf_counter() - tp
+            nbytes += sum(getattr(a, "nbytes", 0) for a in jax.tree.leaves(args))
+            state = self.device_fn(state, args)  # async dispatch: returns early
+            inflight.append(state)
+            if len(inflight) > self.depth:  # bounded staging queue (§2.2)
+                jax.block_until_ready(inflight.popleft())
+        jax.block_until_ready(state)
+        wall = time.perf_counter() - t0
+        return state, ExecReport(wall, prep_s, n_steps, nbytes / max(n_steps, 1))

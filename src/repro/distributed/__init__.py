@@ -1,0 +1,15 @@
+from .sharding import (
+    batch_axes,
+    cache_shardings,
+    input_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+
+__all__ = [
+    "batch_axes",
+    "cache_shardings",
+    "input_shardings",
+    "opt_state_shardings",
+    "param_shardings",
+]

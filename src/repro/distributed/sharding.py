@@ -1,0 +1,245 @@
+"""Sharding rules: DP / TP / EP / ZeRO over the production mesh.
+
+Rules are *divisibility-aware*: a dim is only sharded along a mesh axis when
+its size divides evenly (a NamedSharding requirement). This matters in the
+pool — qwen2.5-32b has 40 heads and qwen2-0.5b has 14, neither divisible by
+the 16-way model axis — so those archs shard the packed ``heads×head_dim``
+projection dim (which *is* divisible) and let GSPMD insert the resharding
+around the attention einsum; the collective term of the roofline makes that
+cost visible instead of hiding it.
+
+Scheme:
+* batch dims            → ("pod","data") (DP across pods and the data axis)
+* attn/MLP in-proj      → model axis on the output (TP, Megatron-style)
+* attn/MLP out-proj     → model axis on the input
+* MoE expert stacks     → model axis on the expert dim (EP)
+* embeddings            → vocab on model axis (falls back to d_model)
+* norms/scalars/biases  → replicated
+* optimizer states      → param spec + the largest remaining dim sharded
+                          along the data axis (ZeRO-style state partitioning)
+* KV caches             → batch on data; kv-heads on model when divisible,
+                          else head_dim on model (long_500k's batch=1 case)
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def batch_axes(mesh: Mesh, cfg: ModelConfig | None = None):
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if cfg is not None and cfg.pure_dp:
+        axes = axes + ("model",)  # batch over every axis: 256/512-way DP
+    return axes
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _div(mesh: Mesh, dim: int, axis: str) -> str | None:
+    return axis if dim % _axis_size(mesh, axis) == 0 and dim > 0 else None
+
+
+def _apply_fsdp(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Additionally shard the largest unsharded divisible dim along data."""
+    data = _axis_size(mesh, "data")
+    spec = list(spec)
+    best, best_dim = -1, -1
+    for i, (dim, ax) in enumerate(zip(shape, spec)):
+        if ax is None and dim % data == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        spec[best] = "data"
+    return P(*spec)
+
+
+_ATTN_PARAMS = ("wq", "wk", "wv", "wo", "bq", "bk", "bv")
+# rwkv time-mix: TP here puts a cross-shard reduce inside every step of the
+# 4096-long sequence scan; tp_attention=0 replicates the mixer the same way
+_MIXER_CTX = {"attn", "self_attn", "cross_attn", "tm"}
+_RWKV_TM_PARAMS = ("wr", "wk", "wv", "wg", "wo", "w_decay")
+
+
+def _spec_for_param(
+    mesh: Mesh, path: tuple[str, ...], shape: tuple[int, ...],
+    cfg: ModelConfig | None = None,
+) -> P:
+    name = path[-1]
+    ctx = set(path)
+    nd = len(shape)
+
+    if cfg is not None and cfg.pure_dp:
+        return P(*([None] * nd))  # fully replicated; batch takes every axis
+
+    if (
+        cfg is not None
+        and not cfg.tp_attention
+        and (name in _ATTN_PARAMS or name in _RWKV_TM_PARAMS)
+        and ctx & _MIXER_CTX
+    ):
+        spec = P(*([None] * nd))  # replicate attention, TP only in the MLPs
+        return _apply_fsdp(mesh, spec, shape) if cfg.fsdp else spec
+
+    def trailing(*axes):
+        """Pad leading stack dims (scan-stacked layers/groups) with None."""
+        pad = [None] * (nd - len(axes))
+        spec = P(*pad, *axes)
+        if cfg is not None and cfg.fsdp:
+            spec = _apply_fsdp(mesh, spec, shape)
+        return spec
+
+    if name in ("embed",):
+        v, d = shape[-2], shape[-1]
+        ax = _div(mesh, v, "model")
+        if ax:
+            return P(ax, None)
+        return P(None, _div(mesh, d, "model"))
+    if name == "head":
+        d, v = shape[-2], shape[-1]
+        return P(None, _div(mesh, v, "model"))
+
+    # MoE expert stacks: (…, E, d, ff) / (…, E, ff, d) — EP on the expert dim
+    if ctx & {"moe", "mamba_moe"} or (name == "router"):
+        if name == "router":
+            nd_r = nd
+            return P(*([None] * nd_r))
+        e = shape[-3]
+        ax = _div(mesh, e, "model")
+        if ax:
+            spec = P(*([None] * (nd - 3)), ax, None, None)
+            # the shard_map MoE consumes experts at exactly EP sharding; FSDP
+            # must not add a data dim there (in_specs are explicit)
+            if cfg is not None and cfg.fsdp and cfg.moe_impl != "shard_map":
+                spec = _apply_fsdp(mesh, spec, shape)
+            return spec
+        return trailing(None, None, _div(mesh, shape[-1], "model"))
+
+    if nd >= 2:
+        din, dout = shape[-2], shape[-1]
+        # column-parallel (shard output dim): qkv projections, MLP in/gate,
+        # mamba in_proj & conv, rwkv r/k/v/g/decay
+        if name in ("wq", "wk", "wv", "wi", "wg", "in_proj", "conv_w", "wr", "w_decay"):
+            return trailing(None, _div(mesh, dout, "model"))
+        # row-parallel (shard input dim): output projections
+        if name in ("wo", "out_proj", "x_proj"):
+            return trailing(_div(mesh, din, "model"), None)
+        if name in ("a_log",):
+            return trailing(_div(mesh, din, "model"), None)
+    if nd >= 1 and name in ("bq", "bk", "bv"):
+        return trailing(_div(mesh, shape[-1], "model"))
+    if nd >= 1 and name in ("dt_bias", "d_skip"):
+        return trailing(_div(mesh, shape[-1], "model"))
+    # norms, scalar mixes, biases: replicated
+    return P(*([None] * nd))
+
+
+def _tree_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        names = tuple(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        )
+        yield names, leaf
+    return
+
+
+def _map_with_paths(tree, fn):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        names = tuple(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        )
+        leaves.append(fn(names, leaf))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_shardings(mesh: Mesh, abstract_params, cfg: ModelConfig | None = None):
+    def fn(names, leaf):
+        return NamedSharding(mesh, _spec_for_param(mesh, names, leaf.shape, cfg))
+
+    return _map_with_paths(abstract_params, fn)
+
+
+def opt_state_shardings(mesh: Mesh, abstract_opt_state, cfg: ModelConfig | None = None):
+    """ZeRO-style: the master/m/v leaves take the param spec plus one extra
+    dim sharded along the data axis (largest unsharded divisible dim)."""
+    data = _axis_size(mesh, "data")
+
+    def fn(names, leaf):
+        if names[0] == "step":
+            return NamedSharding(mesh, P())
+        pnames = names[1:]  # strip master/m/v prefix
+        spec = list(_spec_for_param(mesh, pnames, leaf.shape, cfg))
+        if "data" not in spec:  # FSDP params already consume the data axis
+            # pick the largest dim not already sharded and divisible by data
+            best, best_dim = -1, -1
+            for i, (dim, ax) in enumerate(zip(leaf.shape, spec)):
+                if ax is None and dim % data == 0 and dim > best_dim:
+                    best, best_dim = i, dim
+            if best >= 0:
+                spec[best] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return _map_with_paths(abstract_opt_state, fn)
+
+
+def input_shardings(mesh: Mesh, specs: dict, cfg: ModelConfig | None = None):
+    b = batch_axes(mesh, cfg)
+    total = 1
+    for a in b:
+        total *= _axis_size(mesh, a)
+
+    def fn(names, leaf):
+        nd = len(leaf.shape)
+        batch = b if leaf.shape[0] % total == 0 else None
+        return NamedSharding(mesh, P(batch, *([None] * (nd - 1))))
+
+    return _map_with_paths(specs, fn)
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, abstract_cache):
+    b_axes = batch_axes(mesh)
+    data = 1
+    for a in b_axes:
+        data *= _axis_size(mesh, a)
+
+    def fn(names, leaf):
+        name = names[-1]
+        shape = leaf.shape
+        if name in ("k", "v", "xk", "xv", "k_scale", "v_scale"):
+            # (L, B, S, Hkv, D) — scales are D=1 companions of a quantized cache
+            batch = b_axes if shape[1] % data == 0 else None
+            if cfg.cache_shard_seq and _div(mesh, shape[2], "model"):
+                # flash-decoding layout: shard the sequence dim; softmax
+                # reduces with tiny cross-shard (B,H) statistics instead of
+                # regathering the cache every step
+                return NamedSharding(mesh, P(None, batch, "model", None, None))
+            hkv = _div(mesh, shape[3], "model")
+            hd = None if hkv else _div(mesh, shape[4], "model")
+            return NamedSharding(mesh, P(None, batch, None, hkv, hd))
+        if name == "h":  # (G, m, B, d_in, N)
+            batch = b_axes if shape[2] % data == 0 else None
+            return NamedSharding(
+                mesh, P(None, None, batch, _div(mesh, shape[3], "model"), None)
+            )
+        if name == "conv":  # (G, m, B, K, d_in)
+            batch = b_axes if shape[2] % data == 0 else None
+            return NamedSharding(
+                mesh, P(None, None, batch, None, _div(mesh, shape[4], "model"))
+            )
+        if name == "s":  # (L, B, H, hd, hd)
+            batch = b_axes if shape[1] % data == 0 else None
+            return NamedSharding(
+                mesh, P(None, batch, _div(mesh, shape[2], "model"), None, None)
+            )
+        if name in ("shift_tm", "shift_cm"):  # (L, B, d)
+            batch = b_axes if shape[1] % data == 0 else None
+            return NamedSharding(mesh, P(None, batch, _div(mesh, shape[2], "model")))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+
+    return _map_with_paths(abstract_cache, fn)

@@ -1,0 +1,112 @@
+"""Flash attention (causal/full) as a Pallas TPU kernel.
+
+Online-softmax blocked attention: the (B·H, S_q/bq, S_k/bk) grid streams K/V
+tiles through VMEM while fp32 running max / normalizer / accumulator live in
+VMEM scratch. S² scores never touch HBM — this is the memory-roofline fix
+for the XLA-path attention, and the hillclimb candidate for the
+memory-dominated train cells (EXPERIMENTS.md §Perf).
+
+Block shapes default to MXU-aligned (128) tiles; causal masking prunes via
+global row/col indices so the kernel also serves the decode path (S_q=1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, block_q: int, block_k: int, k_steps: int, causal: bool,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)  # (bk, d)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    if causal:
+        i = pl.program_id(1)
+        rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == k_steps - 1)
+    def _flush():
+        o_ref[0, ...] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, H, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    k_steps = sk // block_k
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=1.0 / (d**0.5),
+            block_q=block_q,
+            block_k=block_k,
+            k_steps=k_steps,
+            causal=causal,
+        ),
+        grid=(b * h, sq // block_q, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,43 @@
+"""Jit'd public wrappers with backend selection.
+
+``backend``:
+* ``"xla"``            — pure-jnp reference path (the dry-run lowers this;
+                          Pallas→TPU does not lower on a CPU backend),
+* ``"pallas_interpret"`` — Pallas kernels executed in interpret mode
+                          (CPU-validatable, used by the test suite),
+* ``"pallas"``          — real Pallas lowering (the TPU target).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention
+from .matmul import configured_matmul, matmul
+
+BACKENDS = ("xla", "pallas", "pallas_interpret")
+
+
+def matmul_op(a, b, backend: str = "xla", **kw):
+    if backend == "xla":
+        return ref.matmul_ref(a, b)
+    return matmul(a, b, interpret=(backend == "pallas_interpret"), **kw)
+
+
+def configured_matmul_op(a, b, zero_points, backend: str = "xla", **kw):
+    if backend == "xla":
+        return ref.configured_matmul_ref(a, b, zero_points[0], zero_points[1])
+    return configured_matmul(
+        a, b, zero_points, interpret=(backend == "pallas_interpret"), **kw
+    )
+
+
+def attention_op(q, k, v, causal: bool = True, backend: str = "xla", **kw):
+    """q,k,v: (B, H, S, D). GQA callers repeat K/V heads before the call."""
+    if backend == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention(
+        q, k, v, causal=causal, interpret=(backend == "pallas_interpret"), **kw
+    )

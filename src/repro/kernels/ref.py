@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def configured_matmul_ref(
+    a: jax.Array, b: jax.Array, zp_a: jax.Array, zp_b: jax.Array
+) -> jax.Array:
+    """OpenGeMM-style GEMM with zero-point configuration registers:
+    C = (A - zp_a)·(B - zp_b)."""
+    a32 = a.astype(jnp.float32) - zp_a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32) - zp_b.astype(jnp.float32)
+    return jnp.dot(a32, b32).astype(jnp.float32)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """q,k,v: (B, H, S, D) — vanilla softmax attention in fp32."""
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(d))
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile one (arch × shape × mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init): the dry-run — and only the dry-run — materializes 512
+placeholder host devices so the production meshes (16×16 single-pod, 2×16×16
+multi-pod) can be built. Smoke tests and benches see the real single device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k [--multi-pod] [--out results/cell.json]
+
+Success criteria: ``.lower().compile()`` completes; ``memory_analysis()`` and
+``cost_analysis()`` are printed (bytes/device proves (non-)fit, FLOPs/bytes
+feed §Roofline); collective bytes are parsed from the post-SPMD HLO.
+"""
+
+import argparse
+import json
+import sys
+import time
+
+
+def optimized_policy(cfg, shape_kind: str, global_batch: int = 0,
+                     chips: int = 256) -> dict:
+    """The best-known distribution policy per (family × step kind), derived
+    from the §Perf hillclimb (EXPERIMENTS.md). This is the beyond-paper
+    configuration — the baseline tables use the naive defaults."""
+    over: dict = {}
+    if cfg.n_experts:
+        over["moe_impl"] = "shard_map"  # explicit a2a EP (all step kinds)
+    if shape_kind in ("train", "prefill"):
+        over["attn_chunk"] = 512  # flash-style attention on the XLA path
+        if shape_kind == "train":
+            over["grad_compression"] = "bf16"
+        # GQA/odd head counts that don't divide the 16-way model axis force
+        # S² score resharding: replicate attention, keep TP in the MLPs.
+        # RWKV: TP in the time-mix puts a reduce inside every scan step.
+        if cfg.family == "ssm" or (
+            cfg.n_kv_heads and (cfg.n_kv_heads % 16 or cfg.n_heads % 16)
+        ):
+            over["tp_attention"] = 0
+        if cfg.family == "hybrid":
+            over["ssm_chunk"] = 512  # SSD-style chunked Mamba scan (memory)
+        if (
+            cfg.param_count() < 2e9
+            and shape_kind == "train"
+            and global_batch % chips == 0  # the batch must tile every chip
+        ):
+            over["pure_dp"] = 1
+            over.pop("tp_attention", None)
+    else:  # decode
+        over["cache_shard_seq"] = 1  # flash-decoding cache layout
+    return over
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, donate: bool = True,
+             overrides: dict | None = None, preset: str = "") -> dict:
+    """One dry-run cell. Methodology (see EXPERIMENTS.md §Dry-run):
+
+    * compile the *scanned* trunk — proves the sharding config lowers and
+      compiles, gives ``memory_analysis`` (realistic buffer scheduling) and
+      the collective schedule (while-body collectives weighted by trip count);
+    * additionally *lower* (not compile) the scan-unrolled trunk — its
+      ``cost_analysis`` gives exact global FLOPs / bytes including remat,
+      which a while-body-counted-once analysis would undercount.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.configs import SHAPES, applicable, get
+    from repro.launch import steps as steps_lib
+    from repro.launch.hlo_analysis import RooflineTerms, collective_bytes_weighted
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import Model
+    from repro.optim import AdamW
+
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    if preset == "optimized":
+        chips = 512 if multi_pod else 256
+        cfg = dataclasses.replace(
+            cfg, **optimized_policy(cfg, shape.kind, shape.global_batch, chips)
+        )
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "skipped", "reason": reason,
+        }
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    optimizer = AdamW() if shape.kind == "train" else None
+
+    # --- scanned compile: sharding proof + memory + collectives ------------
+    model = Model(cfg)
+    step = steps_lib.build_step_for(model, shape, optimizer)
+    kind, abstract_args, donate_argnums = steps_lib.abstract_cell_args(
+        model, shape, mesh, optimizer
+    )
+    if not donate:
+        donate_argnums = ()
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(step, donate_argnums=donate_argnums).lower(*abstract_args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_weighted(hlo, default_trip=cfg.n_layers)
+
+    # --- unrolled lowering: exact global FLOPs / bytes ---------------------
+    model_u = Model(dataclasses.replace(cfg, scan_unroll=True))
+    step_u = steps_lib.build_step_for(model_u, shape, optimizer)
+    _, args_u, _ = steps_lib.abstract_cell_args(model_u, shape, mesh, optimizer)
+    with jax.set_mesh(mesh):
+        cost = jax.jit(step_u).lower(*args_u).cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    global_flops = float(cost.get("flops", 0.0))
+    global_bytes = float(cost.get("bytes accessed", 0.0))
+
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_fields[f] = int(getattr(mem, f, 0) or 0)
+    live_bytes = (
+        mem_fields["argument_size_in_bytes"]
+        + mem_fields["output_size_in_bytes"]
+        - mem_fields["alias_size_in_bytes"]
+        + mem_fields["temp_size_in_bytes"]
+    )
+
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if kind in ("train", "prefill") else 1)
+    model_flops = (6 if kind == "train" else 2) * n_active * tokens
+
+    terms = RooflineTerms(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=global_flops,
+        hlo_bytes=global_bytes,
+        coll_bytes=coll.total_bytes,
+        model_flops=model_flops,
+        per_device_bytes=live_bytes,
+        collectives={
+            k: {"bytes": coll.bytes_by_kind[k], "count": coll.count_by_kind[k]}
+            for k in coll.bytes_by_kind
+        },
+    )
+    record = {
+        "status": "ok", "kind": kind, "compile_s": compile_s,
+        "memory_analysis": mem_fields,
+        **terms.to_dict(),
+    }
+    return record
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default="")
+    p.add_argument("--no-donate", action="store_true")
+    p.add_argument("--preset", default="", choices=("", "optimized"),
+                   help="optimized = best-known policy from §Perf hillclimbs")
+    p.add_argument("--override", action="append", default=[],
+                   help="cfg overrides, e.g. --override remat=dots")
+    args = p.parse_args()
+
+    overrides = {}
+    for item in args.override:
+        k, v = item.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    record = run_cell(args.arch, args.shape, args.multi_pod,
+                      donate=not args.no_donate, overrides=overrides or None,
+                      preset=args.preset)
+
+    if record["status"] == "ok":
+        print(f"[dryrun] {args.arch} × {args.shape} × {record['mesh']}: COMPILED "
+              f"in {record['compile_s']:.1f}s")
+        print(f"  memory_analysis: {record['memory_analysis']}")
+        print(f"  bytes/device (live): {record['per_device_bytes']/2**30:.2f} GiB")
+        print(f"  cost_analysis (global): flops={record['hlo_flops']:.3e} "
+              f"bytes={record['hlo_bytes']:.3e}")
+        print(f"  collectives: {record['collectives']}")
+        print(f"  roofline terms (s): compute={record['compute_s']:.4e} "
+              f"memory={record['memory_s']:.4e} collective={record['collective_s']:.4e}"
+              f"  dominant={record['dominant']}")
+        print(f"  MODEL_FLOPS={record['model_flops']:.3e} "
+              f"useful/HLO={record['useful_flops_ratio']:.3f} "
+              f"roofline_fraction={record['roofline_fraction']:.3f}")
+    else:
+        print(f"[dryrun] {args.arch} × {args.shape}: SKIPPED — {record['reason']}")
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,284 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``compiled.cost_analysis()`` supplies FLOPs and bytes accessed; collective
+traffic is NOT in cost_analysis, so we parse the (post-SPMD, per-device) HLO
+text and sum the operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (incl. async -start forms).
+
+Hardware constants (TPU v5e-class, per the assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "tuple": 0, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_GROUPS_DIMS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_DIMS_RE.search(line)
+    if m:  # replica_groups=[G,S]<=[N]: G groups of size S
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(kind: str, result_bytes: int, s: int) -> float:
+    """Per-device bytes on the interconnect under ring algorithms."""
+    if kind == "collective-permute":  # point-to-point: no replica groups
+        return float(result_bytes)
+    if s <= 1:
+        return 0.0
+    frac = (s - 1) / s
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * frac  # reduce-scatter + all-gather phases
+    if kind == "all-gather":
+        return result_bytes * frac  # result is the gathered (full) buffer
+    if kind == "reduce-scatter":
+        return result_bytes * (s - 1)  # operand = result × S; wire ≈ operand·frac
+    if kind == "all-to-all":
+        return result_bytes * frac
+    return float(result_bytes)  # collective-permute
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int] = field(default_factory=dict)
+    count_by_kind: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _collective_in_line(line: str) -> tuple[str, int] | None:
+    """Returns (kind, index of the op *invocation*) — the kind string also
+    appears in result variable names (``%all-reduce.1 = ...``), so we anchor
+    on the ``kind(`` call syntax."""
+    for k in _COLLECTIVES:
+        for form in (f" {k}(", f" {k}-start("):
+            idx = line.find(form)
+            if idx >= 0:
+                return k, idx
+    return None
+
+
+def _line_wire_bytes(line: str, default_group: int) -> tuple[str, int] | None:
+    if "-done(" in line:
+        return None  # async pair: count the -start only
+    hit = _collective_in_line(line)
+    if hit is None:
+        return None
+    kind, idx = hit
+    head = line[:idx]  # "%name = <result shape(s)>"
+    shapes = _SHAPE_RE.findall(head)
+    if not shapes:
+        return kind, 0
+    # async-start results are tuples (operand, result): take the largest
+    result_bytes = max(_shape_bytes(d, dims) for d, dims in shapes)
+    s = _group_size(line, default_group)
+    return kind, int(_wire_bytes(kind, result_bytes, s))
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    """Flat sum of per-device wire traffic over all collectives (no loop
+    trip-count weighting — see :func:`collective_bytes_weighted`)."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        out = _line_wire_bytes(line, default_group)
+        if out is None:
+            continue
+        kind, nbytes = out
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+# --------------------------------------------------------------------------
+# Loop-aware attribution: collectives inside a `while` body execute once per
+# trip, but the HLO text prints the body once. We reconstruct the computation
+# graph, extract trip counts (backend_config known_trip_count, falling back
+# to the loop bound constant in the condition computation), and weight.
+# --------------------------------------------------------------------------
+
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w\-.]+)\s*\(.*\)\s*->.*\{")
+_WHILE_RE = re.compile(r"while\(.*?\),\s*condition=%?([\w\-.]+),\s*body=%?([\w\-.]+)")
+_TRIP_RE = re.compile(r'known_trip_count=\{"?n"?[:=]"?(\d+)"?\}')
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def collective_bytes_weighted(hlo_text: str, default_trip: int = 1,
+                              default_group: int = 1) -> CollectiveStats:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    current: list[str] | None = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if m:
+            name = m.group(2)
+            comps[name] = current = []
+            if m.group(1):
+                entry = name
+            continue
+        if current is not None:
+            current.append(line)
+
+    # per-computation collective totals and while edges
+    per_comp: dict[str, CollectiveStats] = {}
+    edges: dict[str, list[tuple[str, str, int | None]]] = {}
+    for name, lines in comps.items():
+        st = CollectiveStats()
+        edges[name] = []
+        for line in lines:
+            out = _line_wire_bytes(line, default_group)
+            if out is not None:
+                kind, nbytes = out
+                st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0) + nbytes
+                st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + 1
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else None
+                if trip is None and cond in comps:
+                    consts = [int(c) for l in comps[cond] for c in _CONST_RE.findall(l)]
+                    trip = max(consts) if consts else None
+                edges[name].append((cond, body, trip))
+        per_comp[name] = st
+
+    total = CollectiveStats()
+    visited: set[str] = set()
+
+    def visit(comp: str, mult: int, seen: frozenset):
+        if comp not in per_comp or comp in seen:
+            return
+        visited.add(comp)
+        st = per_comp[comp]
+        for k, v in st.bytes_by_kind.items():
+            total.bytes_by_kind[k] = total.bytes_by_kind.get(k, 0) + v * mult
+            total.count_by_kind[k] = total.count_by_kind.get(k, 0) + st.count_by_kind[k] * mult
+        for cond, body, trip in edges.get(comp, []):
+            t = trip if trip is not None else default_trip
+            visit(body, mult * max(t, 1), seen | {comp})
+            visit(cond, mult * max(t, 1), seen | {comp})
+
+    if entry is None:  # fallback: flat count
+        return collective_bytes(hlo_text, default_group)
+    visit(entry, 1, frozenset())
+    # computations not reachable via while edges (async wrappers etc.): ×1
+    for name, st in per_comp.items():
+        if name in visited or not st.bytes_by_kind:
+            continue
+        for k, v in st.bytes_by_kind.items():
+            total.bytes_by_kind[k] = total.bytes_by_kind.get(k, 0) + v
+            total.count_by_kind[k] = total.count_by_kind.get(k, 0) + st.count_by_kind[k]
+    return total
+
+
+@dataclass
+class RooflineTerms:
+    """The three dry-run roofline terms, in seconds, plus provenance."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # GLOBAL flops (per-device × chips)
+    hlo_bytes: float  # GLOBAL bytes accessed
+    coll_bytes: float  # per-device collective bytes on the wire
+    model_flops: float  # 6·N·D (or 6·N_active·D)
+    per_device_bytes: float  # peak memory from memory_analysis
+    collectives: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        # per-device wire bytes over one chip's ICI links
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time estimate: overlapped comms ⇒ max of terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound implied by the three terms."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.step_time_s if self.step_time_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "per_device_bytes": self.per_device_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+        }

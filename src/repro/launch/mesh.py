@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function — not a module-level constant — so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods × 256 chips as (pod=2, data=16, model=16); the pod axis is
+pure data parallelism across the cross-pod (DCN-class) links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1-device mesh for CPU smoke tests and examples."""
+    return jax.make_mesh((1, 1), ("data", "model"))

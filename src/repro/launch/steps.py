@@ -1,0 +1,128 @@
+"""Step-function builders shared by training, serving, and the dry-run.
+
+Everything here is mesh-agnostic: the functions close over a Model (+
+optimizer) only; shardings are attached at lower/compile time by giving
+``jax.jit`` ShapeDtypeStruct arguments that carry NamedShardings
+(``with_shardings``), so the same step lowers on the 1-device smoke mesh and
+the 512-chip production mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.distributed import (
+    cache_shardings,
+    input_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.optim import AdamW
+
+
+def build_train_step(model: Model, optimizer: AdamW):
+    compress = model.cfg.grad_compression
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        if compress == "bf16":
+            # gradient compression: force the cross-data reduction to happen
+            # in bf16 (halves the dominant all-reduce wire bytes)
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        new_params, new_opt, opt_metrics = optimizer.update(params, grads, opt_state)
+        return new_params, new_opt, {**metrics, **opt_metrics, "loss": loss}
+
+    return train_step
+
+
+def build_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill_step
+
+
+def build_decode_step(model: Model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# Abstract (ShapeDtypeStruct) argument trees with shardings attached
+# --------------------------------------------------------------------------
+
+
+def with_shardings(abstract_tree, sharding_tree):
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        abstract_tree,
+        sharding_tree,
+    )
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Decode-step inputs: one new token against a seq_len-deep cache."""
+    b = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def abstract_cell_args(model: Model, shape: ShapeSpec, mesh, optimizer: AdamW | None):
+    """Abstract, sharded argument trees for one (arch × shape) dry-run cell.
+
+    Returns (step_kind, args tuple, donate_argnums)."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        params = model.abstract_params()
+        assert optimizer is not None
+        opt = jax.eval_shape(optimizer.init, params)
+        batch = model.input_specs(shape.global_batch, shape.seq_len)
+        args = (
+            with_shardings(params, param_shardings(mesh, params, cfg)),
+            with_shardings(opt, opt_state_shardings(mesh, opt, cfg)),
+            with_shardings(batch, input_shardings(mesh, batch, cfg)),
+        )
+        return "train", args, (0, 1)
+    if shape.kind == "prefill":
+        params = model.abstract_params()
+        batch = model.input_specs(shape.global_batch, shape.seq_len)
+        batch.pop("labels")
+        args = (
+            with_shardings(params, param_shardings(mesh, params, cfg)),
+            with_shardings(batch, input_shardings(mesh, batch, cfg)),
+        )
+        return "prefill", args, ()
+    # decode
+    params = model.abstract_params()
+    cache = model.init_cache(shape.global_batch, shape.seq_len, concrete=False)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_sh = input_shardings(mesh, {"tokens": tokens}, cfg)["tokens"]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    args = (
+        with_shardings(params, param_shardings(mesh, params, cfg)),
+        with_shardings(cache, cache_shardings(mesh, cfg, cache)),
+        jax.ShapeDtypeStruct(tokens.shape, tokens.dtype, sharding=tok_sh),
+        jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P())),
+    )
+    return "decode", args, (1,)
+
+
+def build_step_for(model: Model, shape: ShapeSpec, optimizer: AdamW | None):
+    if shape.kind == "train":
+        return build_train_step(model, optimizer)
+    if shape.kind == "prefill":
+        return build_prefill_step(model)
+    return build_decode_step(model)

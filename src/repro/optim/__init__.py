@@ -1,0 +1,3 @@
+from .adamw import AdamW, CosineSchedule
+
+__all__ = ["AdamW", "CosineSchedule"]

@@ -1,0 +1,3 @@
+from .supervisor import StragglerMonitor, TrainSupervisor
+
+__all__ = ["StragglerMonitor", "TrainSupervisor"]

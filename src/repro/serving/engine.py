@@ -1,0 +1,121 @@
+"""Continuous-batching serving engine.
+
+Production serving never decodes lock-step batches: requests arrive and
+finish at different times, so the engine keeps a fixed pool of KV-cache
+*slots* and every decode launch advances whichever slots are live, each at
+its own position (`decode_step` accepts an (B,) position vector). A finished
+request's slot is handed to the next queued request immediately — no
+drain-the-batch bubbles.
+
+Configuration-wall connection: the per-launch descriptor is exactly
+{tokens, positions, live-mask} — a few hundred bytes against a device-resident
+multi-GiB cache. The engine is the deduplicated-configuration serving design
+the paper's §5.4 implies: everything invariant lives on-device; only the
+changing fields cross the host→device boundary each step.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, max_slots: int = 4, max_len: int = 256,
+                 eos_id: int | None = None):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model.init_cache(max_slots, max_len)
+        self.positions = np.zeros((max_slots,), np.int32)
+        self.tokens = np.zeros((max_slots, 1), np.int32)
+        self.slot_req: list[Request | None] = [None] * max_slots
+        self.queue: deque[Request] = deque()
+        self.finished: list[Request] = []
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    # ---------------------------------------------------------------- admin
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    @property
+    def live_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is not None]
+
+    def _admit(self) -> None:
+        for slot in range(self.max_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.slot_req[slot] = req
+            # prefill by stepping the prompt through the cache (simple
+            # token-at-a-time prefill; a production engine would batch this)
+            self.positions[slot] = 0
+            for tok in req.prompt[:-1]:
+                self._step_single_slot(slot, tok)
+            self.tokens[slot, 0] = req.prompt[-1]
+
+    def _step_single_slot(self, slot: int, token: int) -> None:
+        toks = self.tokens.copy()
+        toks[slot, 0] = token
+        pos = jnp.asarray(self.positions)
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(toks), pos
+        )
+        self.positions[slot] += 1
+
+    # ----------------------------------------------------------------- step
+
+    def step(self) -> int:
+        """One decode launch over all live slots; returns #tokens produced."""
+        self._admit()
+        live = self.live_slots
+        if not live:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.positions),
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        produced = 0
+        for slot in live:
+            req = self.slot_req[slot]
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            self.positions[slot] += 1
+            self.tokens[slot, 0] = tok
+            produced += 1
+            hit_eos = self.eos_id is not None and tok == self.eos_id
+            if (
+                len(req.generated) >= req.max_new_tokens
+                or self.positions[slot] >= self.max_len - 1
+                or hit_eos
+            ):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[slot] = None  # slot freed for the next request
+                self.positions[slot] = 0
+        return produced
+
+    def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or self.live_slots) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

@@ -1,0 +1,241 @@
+"""Unit tests for the accfg optimization passes (§5.3–§5.5)."""
+
+import pytest
+
+from repro.core import accelerators, ir
+from repro.core.builder import Builder
+from repro.core.interp import run
+from repro.core.passes import (
+    canonicalize,
+    dedup,
+    hoist_invariant_setup_fields,
+    hoist_setups_into_branches,
+    optimize,
+    overlap,
+    trace_states,
+)
+
+MODELS = {"acc": accelerators.AcceleratorModel(
+    name="acc", p_peak=64.0, concurrent=True, host_cpi=1.0,
+    bytes_per_field=4, fields_per_write=1, instrs_per_write=2,
+    dim_fields=("M", "K", "N"),
+)}
+
+
+def _setup_ops(module):
+    return [op for op in module.walk() if op.name == "accfg.setup"]
+
+
+def _field_count(module):
+    return sum(len(op.attrs["fields"]) for op in _setup_ops(module))
+
+
+def run_log(module):
+    return run(module, MODELS).log_signature()
+
+
+# --------------------------------------------------------------------------
+
+
+def straightline_program():
+    b = Builder()
+    with b.function("main"):
+        c1, c2 = b.const(8), b.const(16)
+        s1 = b.setup("acc", {"M": c1, "K": c1, "N": c1})
+        t1 = b.launch(s1, "acc")
+        b.await_(t1)
+        s2 = b.setup("acc", {"M": c1, "K": c1, "N": c2})  # M,K redundant
+        t2 = b.launch(s2, "acc")
+        b.await_(t2)
+    return b.module
+
+
+def test_state_tracing_chains_straightline():
+    m = straightline_program()
+    trace_states(m)
+    setups = _setup_ops(m)
+    assert ir.setup_in_state(setups[0]) is None
+    assert ir.setup_in_state(setups[1]) is setups[0].result
+
+
+def test_dedup_removes_redundant_fields():
+    m = straightline_program()
+    before = run_log(m)
+    trace_states(m)
+    removed = dedup(m)
+    assert removed == 2  # M and K
+    assert run_log(m) == before
+
+
+def test_dedup_respects_changed_values():
+    b = Builder()
+    with b.function("main"):
+        c1, c2 = b.const(8), b.const(16)
+        s1 = b.setup("acc", {"M": c1, "K": c1, "N": c1})
+        b.await_(b.launch(s1, "acc"))
+        s2 = b.setup("acc", {"M": c2, "K": c1, "N": c1})  # M actually changes
+        b.await_(b.launch(s2, "acc"))
+    m = b.module
+    before = run_log(m)
+    trace_states(m)
+    assert dedup(m) == 2  # K, N only
+    assert run_log(m) == before
+    assert _field_count(m) == 4
+
+
+def test_opaque_call_blocks_dedup():
+    b = Builder()
+    with b.function("main"):
+        c1 = b.const(8)
+        s1 = b.setup("acc", {"M": c1, "K": c1, "N": c1})
+        b.await_(b.launch(s1, "acc"))
+        b.call("printf", effects="all")  # clobbers accelerator state
+        s2 = b.setup("acc", {"M": c1, "K": c1, "N": c1})
+        b.await_(b.launch(s2, "acc"))
+    m = b.module
+    trace_states(m)
+    assert dedup(m) == 0  # nothing provable across the barrier
+
+
+def test_effects_none_call_allows_dedup():
+    b = Builder()
+    with b.function("main"):
+        c1 = b.const(8)
+        s1 = b.setup("acc", {"M": c1, "K": c1, "N": c1})
+        b.await_(b.launch(s1, "acc"))
+        b.call("printf", effects="none")  # #accfg.effects<none>
+        s2 = b.setup("acc", {"M": c1, "K": c1, "N": c1})
+        b.await_(b.launch(s2, "acc"))
+    m = b.module
+    trace_states(m)
+    assert dedup(m) == 3
+
+
+def loop_program(n=4):
+    b = Builder()
+    with b.function("main"):
+        c8 = b.const(8)
+        base = b.const(4096)
+        lb, ub, one = b.index(0), b.index(n), b.index(1)
+        with b.for_(lb, ub, one) as (loop, iv, _):
+            ptr = b.add(base, b.mul(iv, c8))
+            s = b.setup("acc", {"A": ptr, "M": c8, "K": c8, "N": c8})
+            b.await_(b.launch(s, "acc"))
+    return b.module
+
+
+def test_state_tracing_threads_loops():
+    m = loop_program()
+    trace_states(m)
+    loop = next(op for op in m.walk() if op.name == "scf.for")
+    # the loop now carries a state iter_arg and the body setup chains from it
+    assert any(a.type == ir.STATE for a in ir.for_iter_args(loop))
+    inner = next(op for op in loop.walk() if op.name == "accfg.setup")
+    ins = ir.setup_in_state(inner)
+    assert ins is not None and ins.is_block_arg
+
+
+def test_licm_hoists_invariant_fields():
+    m = loop_program()
+    before = run_log(m)
+    trace_states(m)
+    hoisted = hoist_invariant_setup_fields(m)
+    assert hoisted == 3  # M, K, N move out; A stays (iv-dependent)
+    assert run_log(m) == before
+    loop = next(op for op in m.walk() if op.name == "scf.for")
+    inner = [op for op in loop.walk() if op.name == "accfg.setup"]
+    assert all(set(op.attrs["fields"]) <= {"A"} for op in inner)
+
+
+def test_full_pipeline_loop_equivalence_and_speedup():
+    def build():
+        return loop_program(8)
+
+    base = build()
+    base_trace = run(base, MODELS)
+
+    opt = build()
+    optimize(opt, concurrent_accels={"acc"})
+    opt_trace = run(opt, MODELS)
+
+    assert opt_trace.log_signature() == base_trace.log_signature()
+    assert opt_trace.total_cycles < base_trace.total_cycles
+
+
+def test_overlap_stages_next_iteration():
+    m = loop_program(8)
+    trace_states(m)
+    canonicalize(m)
+    moved = overlap(m, {"acc"})
+    assert moved >= 1
+    loop = next(op for op in m.walk() if op.name == "scf.for")
+    body = loop.regions[0].block
+    names = [op.name for op in body.ops]
+    # canonical overlapped form: launch before setup before await (Fig. 9)
+    il = names.index("accfg.launch")
+    is_ = names.index("accfg.setup")
+    ia = names.index("accfg.await")
+    assert il < is_ < ia
+
+
+def test_overlap_preserves_semantics():
+    def build():
+        return loop_program(6)
+
+    base_log = run_log(build())
+    m = build()
+    optimize(m, concurrent_accels={"acc"}, do_dedup=False, do_overlap=True)
+    assert run_log(m) == base_log
+
+
+def branch_program(cond_val):
+    b = Builder()
+    with b.function("main"):
+        c8, c16 = b.const(8), b.const(16)
+        cond = b.cmp("slt", b.const(cond_val), b.const(10))
+        s0 = b.setup("acc", {"M": c8, "K": c8, "N": c8})
+        b.await_(b.launch(s0, "acc"))
+        with b.if_(cond) as if_op:
+            with b.then(if_op):
+                s1 = b.setup("acc", {"M": c16}, in_state=s0)
+                b.await_(b.launch(s1, "acc"))
+            with b.else_(if_op):
+                pass
+        s2 = b.setup("acc", {"K": c8, "N": c8})  # redundant on both paths
+        b.await_(b.launch(s2, "acc"))
+    return b.module
+
+
+@pytest.mark.parametrize("cond_val", [5, 15])
+def test_branch_dedup_by_intersection(cond_val):
+    m = branch_program(cond_val)
+    before = run_log(m)
+    trace_states(m)
+    dedup(m)
+    assert run_log(m) == before
+    # K and N survive the if/else intersection and are removed
+    s2 = _setup_ops(m)[-1]
+    assert s2.attrs["fields"] == []or s2.attrs["fields"] == []
+
+
+def test_branch_hoisting_creates_linear_chains():
+    m = branch_program(5)
+    before = run_log(m)
+    trace_states(m)
+    hoisted = hoist_setups_into_branches(m)
+    assert hoisted == 1
+    assert run_log(m) == before
+
+
+def test_setup_merging():
+    b = Builder()
+    with b.function("main"):
+        c8 = b.const(8)
+        s1 = b.setup("acc", {"M": c8})
+        s2 = b.setup("acc", {"K": c8, "N": c8}, in_state=s1)
+        b.await_(b.launch(s2, "acc"))
+    m = b.module
+    before = run_log(m)
+    canonicalize(m)
+    assert len(_setup_ops(m)) == 1
+    assert run_log(m) == before

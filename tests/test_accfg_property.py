@@ -1,0 +1,156 @@
+"""Property-based testing of the accfg pipeline: for randomly generated
+programs (loops, branches, opaque calls, redundant and changing setups), the
+full optimization pipeline must preserve the observable accelerator
+behaviour — identical invocation logs (the register-file snapshot at every
+launch) and final register state — at never-worse simulated cycles."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accelerators, ir
+from repro.core.builder import Builder
+from repro.core.interp import Interpreter
+from repro.core.passes import baseline, optimize
+
+FIELDS = ("A", "B", "M", "K", "N")
+
+MODEL = accelerators.AcceleratorModel(
+    name="acc", p_peak=64.0, concurrent=True, host_cpi=1.0,
+    bytes_per_field=4, fields_per_write=1, instrs_per_write=2,
+    dim_fields=("M", "K", "N"),
+)
+
+
+@st.composite
+def programs(draw):
+    """A random accfg program as a nested command list."""
+    n_consts = draw(st.integers(2, 4))
+    consts = draw(
+        st.lists(st.integers(1, 16), min_size=n_consts, max_size=n_consts)
+    )
+
+    def triple(depth):
+        fields = draw(
+            st.lists(st.sampled_from(FIELDS), min_size=1, max_size=5, unique=True)
+        )
+        spec = []
+        for f in fields:
+            if depth > 0 and draw(st.booleans()):
+                spec.append((f, ("iv", draw(st.integers(0, n_consts - 1)))))
+            else:
+                spec.append((f, ("const", draw(st.integers(0, n_consts - 1)))))
+        return ("triple", spec, draw(st.booleans()))  # bool: launch it?
+
+    cmds = []
+    for _ in range(draw(st.integers(1, 5))):
+        kind = draw(st.sampled_from(["triple", "loop", "if", "call"]))
+        if kind == "triple":
+            cmds.append(triple(0))
+        elif kind == "call":
+            cmds.append(("call", draw(st.sampled_from(["all", "none"]))))
+        elif kind == "if":
+            cmds.append(
+                ("if", draw(st.booleans()), [triple(0)], [triple(0)] if draw(st.booleans()) else [])
+            )
+        else:
+            body = [triple(1) for _ in range(draw(st.integers(1, 2)))]
+            cmds.append(("loop", draw(st.integers(1, 4)), body))
+    return consts, cmds
+
+
+def build(program) -> ir.Module:
+    consts, cmds = program
+    b = Builder()
+    with b.function("main"):
+        cvals = [b.const(c) for c in consts]
+
+        def emit_triple(spec, do_launch, iv=None):
+            fields = {}
+            for name, (kind, idx) in spec:
+                if kind == "iv" and iv is not None:
+                    fields[name] = b.add(iv, cvals[idx])
+                else:
+                    fields[name] = cvals[idx]
+            s = b.setup("acc", fields)
+            if do_launch:
+                b.await_(b.launch(s, "acc"))
+
+        for cmd in cmds:
+            if cmd[0] == "triple":
+                emit_triple(cmd[1], cmd[2])
+            elif cmd[0] == "call":
+                b.call("ext", effects=cmd[1])
+            elif cmd[0] == "if":
+                cond = b.cmp("slt", cvals[0], cvals[0]) if not cmd[1] else b.cmp(
+                    "sle", cvals[0], cvals[0]
+                )
+                with b.if_(cond) as if_op:
+                    with b.then(if_op):
+                        for t in cmd[2]:
+                            emit_triple(t[1], t[2])
+                    with b.else_(if_op):
+                        for t in cmd[3]:
+                            emit_triple(t[1], t[2])
+            elif cmd[0] == "loop":
+                lb, ub, one = b.index(0), b.index(cmd[1]), b.index(1)
+                with b.for_(lb, ub, one) as (_, iv, _iters):
+                    for t in cmd[2]:
+                        emit_triple(t[1], t[2], iv=iv)
+    return b.module
+
+
+def observe(module):
+    interp = Interpreter({"acc": MODEL})
+    trace = interp.run(module)
+    return trace.log_signature(), dict(interp.regs["acc"]), trace.total_cycles
+
+
+@settings(max_examples=60, deadline=None)
+@given(programs())
+def test_optimized_program_is_observationally_equivalent(program):
+    """The observable is the invocation log (the register snapshot at each
+    launch). The final register file may legitimately differ under overlap:
+    the software pipeline stages the next (never-launched) configuration
+    after the last iteration, exactly as in Figure 9."""
+    base = build(program)
+    baseline(base)
+    base_log, _, base_cycles = observe(base)
+
+    opt = build(program)
+    optimize(opt, concurrent_accels={"acc"})
+    opt_log, _, opt_cycles = observe(opt)
+
+    assert opt_log == base_log
+
+
+@settings(max_examples=40, deadline=None)
+@given(programs())
+def test_dedup_preserves_final_register_state(program):
+    """Without overlap, even the final register file must match — dedup only
+    removes writes whose value is already present."""
+    base = build(program)
+    baseline(base)
+    base_log, base_regs, _ = observe(base)
+
+    opt = build(program)
+    optimize(opt, concurrent_accels=set(), do_dedup=True, do_overlap=False)
+    opt_log, opt_regs, _ = observe(opt)
+
+    assert opt_log == base_log
+    assert opt_regs == base_regs
+
+
+@settings(max_examples=30, deadline=None)
+@given(programs())
+def test_dedup_never_increases_config_bytes(program):
+    base = build(program)
+    baseline(base)
+    interp_b = Interpreter({"acc": MODEL})
+    tb = interp_b.run(base)
+
+    opt = build(program)
+    optimize(opt, concurrent_accels=set(), do_dedup=True, do_overlap=False)
+    interp_o = Interpreter({"acc": MODEL})
+    to = interp_o.run(opt)
+
+    assert to.config_bytes <= tb.config_bytes
+    assert to.log_signature() == tb.log_signature()

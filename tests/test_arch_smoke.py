@@ -1,0 +1,124 @@
+"""Deliverable (f): per-architecture smoke tests.
+
+Every assigned architecture instantiates a REDUCED same-family config and
+runs one forward + one train step + one decode step on CPU, asserting output
+shapes and the absence of NaNs. Full configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, cells, get
+from repro.models.model import Model
+from repro.optim import AdamW
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.family == "vlm":
+        batch["frontend_embeds"] = jnp.zeros(
+            (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        batch["frontend_embeds"] = jnp.zeros(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_and_decode(arch):
+    cfg = get(arch).reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, remat="none")
+    model = Model(cfg)
+    key = jax.random.key(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), "NaN in logits"
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert jnp.isfinite(loss)
+
+    cache = model.init_cache(B, 32)
+    step = jax.jit(model.decode_step)
+    lg, cache = step(params, cache, batch["tokens"][:, :1], jnp.int32(0))
+    lg2, _ = step(params, cache, batch["tokens"][:, 1:2], jnp.int32(1))
+    assert lg.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg2.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "phi3.5-moe-42b-a6.6b", "rwkv6-7b"])
+def test_arch_smoke_train_step(arch):
+    import dataclasses
+    cfg = dataclasses.replace(get(arch).reduced(), remat="none")
+    model = Model(cfg)
+    optimizer = AdamW()
+    key = jax.random.key(0)
+    params = model.init(key)
+    opt_state = optimizer.init(params)
+    batch = _batch(cfg, key)
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        return optimizer.update(params, grads, opt_state) + (loss,)
+
+    params2, opt2, metrics, loss = train_step(params, opt_state, batch)
+    assert jnp.isfinite(loss)
+    assert jnp.isfinite(metrics["grad_norm"])
+    # parameters actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+
+
+def test_cell_applicability_matrix():
+    all_cells = cells(include_inapplicable=True)
+    assert len(all_cells) == 40  # 10 archs × 4 shapes
+    runnable = [c for c in all_cells if c[2]]
+    skipped = [c for c in all_cells if not c[2]]
+    assert len(runnable) == 32
+    assert len(skipped) == 8
+    assert {c[0].name for c in skipped} == {
+        a.name for a in ARCHS.values() if not a.supports_long_context
+    }
+    for _, shape, ok, reason in skipped:
+        assert shape.name == "long_500k" and "full-attention" in reason
+
+
+def test_param_counts_match_advertised_sizes():
+    expect = {
+        "jamba-1.5-large-398b": (398e9, 0.05),
+        "phi3.5-moe-42b-a6.6b": (42e9, 0.05),
+        "kimi-k2-1t-a32b": (1000e9, 0.08),
+        "phi4-mini-3.8b": (3.8e9, 0.05),
+        "qwen2.5-32b": (32e9, 0.05),
+        "minitron-4b": (4.0e9, 0.10),
+        "qwen2-0.5b": (0.5e9, 0.05),
+        "phi-3-vision-4.2b": (4.2e9, 0.12),
+        "whisper-medium": (0.769e9, 0.05),
+        "rwkv6-7b": (7e9, 0.25),
+    }
+    for name, (target, tol) in expect.items():
+        n = get(name).param_count()
+        assert abs(n - target) / target < tol, f"{name}: {n/1e9:.2f}B vs {target/1e9}B"
+
+
+def test_active_params_moe():
+    kimi = get("kimi-k2-1t-a32b")
+    assert abs(kimi.active_param_count() - 32e9) / 32e9 < 0.05
+    jamba = get("jamba-1.5-large-398b")
+    assert abs(jamba.active_param_count() - 94e9) / 94e9 < 0.05

@@ -1,0 +1,49 @@
+"""Decode-vs-forward parity: stepping token-by-token through the cache path
+must reproduce the training forward's logits (the strongest correctness
+check on the serving stack)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models.model import Model
+
+ARCHS = ["qwen2-0.5b", "phi3.5-moe-42b-a6.6b", "rwkv6-7b", "jamba-1.5-large-398b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = dataclasses.replace(get(arch).reduced(), remat="none")
+    if cfg.n_experts:
+        # capacity-based MoE drops different tokens at different batch sizes
+        # (a train/serve divergence inherent to the formulation); give the
+        # parity test drop-free capacity so routing is identical on both paths
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    model = Model(cfg)
+    key = jax.random.key(0)
+    params = model.init(key)
+
+    B, S = 2, 8
+    tokens = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    full_logits, _ = jax.jit(model.forward)(params, batch)  # (B, S, V)
+
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    got = []
+    for i in range(S):
+        lg, cache = step(params, cache, tokens[:, i : i + 1], jnp.int32(i))
+        got.append(lg[:, 0])
+    dec_logits = jnp.stack(got, axis=1)
+
+    a = np.asarray(full_logits, np.float32)
+    b = np.asarray(dec_logits, np.float32)
+    np.testing.assert_allclose(a, b, rtol=0.05, atol=0.15)
+    # top-1 agreement (bf16: the associative-scan vs recurrent SSM paths sum
+    # in different orders, so an occasional near-tie may flip)
+    assert (a.argmax(-1) == b.argmax(-1)).mean() >= 0.9

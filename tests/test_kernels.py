@@ -1,0 +1,100 @@
+"""Per-kernel allclose vs the pure-jnp oracles, across shape/dtype sweeps
+(interpret mode executes the kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+MATMUL_SHAPES = [(128, 128, 128), (256, 128, 128), (128, 384, 256), (384, 256, 128)]
+
+
+@pytest.mark.parametrize("shape", MATMUL_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_oracle(shape, dtype):
+    m, k, n = shape
+    a = _rand(jax.random.key(1), (m, k), dtype)
+    b = _rand(jax.random.key(2), (k, n), dtype)
+    got = ops.matmul_op(a, b, backend="pallas_interpret")
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+@pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 128)])
+def test_matmul_block_shapes(blocks):
+    bm, bn, bk = blocks
+    a = _rand(jax.random.key(1), (256, 256), jnp.float32)
+    b = _rand(jax.random.key(2), (256, 256), jnp.float32)
+    got = ops.matmul_op(
+        a, b, backend="pallas_interpret", block_m=bm, block_n=bn, block_k=bk
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    zp_a=st.integers(-8, 8),
+    zp_b=st.integers(-8, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_configured_matmul_zero_points(zp_a, zp_b, seed):
+    key = jax.random.key(seed)
+    a = jax.random.randint(key, (128, 128), -16, 16).astype(jnp.float32)
+    b = jax.random.randint(jax.random.key(seed + 1), (128, 128), -16, 16).astype(
+        jnp.float32
+    )
+    zp = jnp.array([zp_a, zp_b], jnp.int32)
+    got = ops.configured_matmul_op(a, b, zp, backend="pallas_interpret")
+    want = ref.configured_matmul_ref(a, b, zp[0], zp[1])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+ATTN_SHAPES = [(1, 2, 128, 64), (2, 4, 256, 64), (1, 1, 256, 128)]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(shape, causal, dtype):
+    b, h, s, d = shape
+    q = _rand(jax.random.key(1), shape, dtype)
+    k = _rand(jax.random.key(2), shape, dtype)
+    v = _rand(jax.random.key(3), shape, dtype)
+    got = ops.attention_op(q, k, v, causal=causal, backend="pallas_interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2,
+    )
+
+
+def test_flash_attention_decode_shape():
+    """S_q=1 against a longer KV sequence (the serving path)."""
+    q = _rand(jax.random.key(1), (2, 4, 1, 64), jnp.float32)
+    k = _rand(jax.random.key(2), (2, 4, 256, 64), jnp.float32)
+    v = _rand(jax.random.key(3), (2, 4, 256, 64), jnp.float32)
+    got = ops.attention_op(q, k, v, causal=False, backend="pallas_interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-3)
+
+
+def test_xla_backend_is_the_oracle():
+    a = _rand(jax.random.key(1), (128, 128), jnp.float32)
+    b = _rand(jax.random.key(2), (128, 128), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.matmul_op(a, b, backend="xla")),
+        np.asarray(ref.matmul_ref(a, b)),
+    )

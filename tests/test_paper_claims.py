@@ -1,0 +1,90 @@
+"""Reproduction of the paper's headline evaluation claims (§6, Appendix A.6):
+
+* OpenGeMM (concurrent configuration): ≈2× geomean, up to ≈2.7×.
+* Gemmini (sequential configuration, WS flow): ≈10.5% geomean.
+* Roofline placement (§4.7/Fig. 12): dedup raises I_OC (rightward) and
+  performance; overlap raises performance at unchanged I_OC.
+"""
+
+import pytest
+
+from repro.core import accelerators, evaluate_levels, geomean, matmul_driver, speedup
+
+OPENGEMM = {"opengemm": accelerators.opengemm_like()}
+GEMMINI = {"gemmini": accelerators.gemmini_like()}
+SIZES = [16, 32, 64, 128, 256]
+
+
+@pytest.fixture(scope="module")
+def opengemm_results():
+    return {
+        k: evaluate_levels(lambda k=k: matmul_driver.opengemm_tiled_matmul(k), OPENGEMM)
+        for k in SIZES
+    }
+
+
+def test_opengemm_geomean_speedup_about_2x(opengemm_results):
+    sp = [speedup(r, "both") for r in opengemm_results.values()]
+    g = geomean(sp)
+    assert 1.7 <= g <= 2.6, f"geomean {g} outside the paper's ≈2× band"
+    assert max(sp) >= 2.2  # paper: up to 2.71×
+
+
+def test_opengemm_each_optimization_helps(opengemm_results):
+    for k, r in opengemm_results.items():
+        assert speedup(r, "dedup") > 1.0, f"dedup regression at K={k}"
+        assert speedup(r, "both") >= speedup(r, "dedup") * 0.99
+        assert speedup(r, "both") >= speedup(r, "overlap") * 0.99
+
+
+def test_opengemm_invocation_logs_identical(opengemm_results):
+    # evaluate_levels asserts this internally; re-assert explicitly for K=64
+    r = opengemm_results[64]
+    logs = {lvl: res.trace.log_signature() for lvl, res in r.items()}
+    base = logs.pop("baseline")
+    for lvl, log in logs.items():
+        assert log == base, lvl
+
+
+def test_gemmini_geomean_about_10pct():
+    sp = []
+    for k in [16, 32, 64, 128, 256, 512]:
+        r = evaluate_levels(
+            lambda k=k: matmul_driver.gemmini_tiled_matmul(k), GEMMINI,
+            levels=("baseline", "dedup"),
+        )
+        sp.append(speedup(r, "dedup"))
+    g = geomean(sp)
+    assert 1.04 <= g <= 1.20, f"geomean {g} outside the paper's ≈10.5% band"
+
+
+def test_roofline_placement_moves_as_predicted():
+    """§4.7: dedup moves points up AND right; overlap moves points up only."""
+    r = evaluate_levels(lambda: matmul_driver.opengemm_tiled_matmul(64), OPENGEMM)
+    base, ded, ovl = r["baseline"].point, r["dedup"].point, r["overlap"].point
+    assert ded.i_oc > base.i_oc  # rightward: fewer config bytes
+    assert ded.performance > base.performance  # upward
+    # overlap: ~unchanged I_OC (±15%: the software pipeline stages one extra
+    # setup in the prologue and after the final launch, Fig. 9) — far from
+    # dedup's rightward jump
+    assert abs(ovl.i_oc - base.i_oc) / base.i_oc < 0.15
+    assert ovl.i_oc < ded.i_oc * 0.5
+    assert ovl.performance > base.performance  # upward only
+
+
+def test_configuration_bound_region_transition():
+    """Fig. 12: at size 128 dedup pushes OpenGeMM out of the config-bound
+    region (the paper calls this out explicitly)."""
+    r = evaluate_levels(lambda: matmul_driver.opengemm_tiled_matmul(128), OPENGEMM)
+    assert r["baseline"].point.bound == "configuration"
+    assert r["dedup"].point.i_oc > r["baseline"].point.i_oc * 1.5
+
+
+def test_gemmini_sequential_never_exceeds_concurrent_roofline():
+    r = evaluate_levels(
+        lambda: matmul_driver.gemmini_tiled_matmul(128), GEMMINI,
+        levels=("baseline", "dedup"),
+    )
+    for res in r.values():
+        p = res.point
+        assert p.performance <= p.attainable_concurrent * 1.01

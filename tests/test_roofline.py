@@ -1,0 +1,64 @@
+"""The configuration roofline model (§4) — including the paper's own
+worked example numbers (§4.6: 41.49% theoretical, 26.78% effective)."""
+
+import math
+
+import pytest
+
+from repro.core import roofline as rl
+
+
+def test_processor_roofline_knee():
+    assert rl.processor_roofline(100.0, 10.0, 5.0) == 50.0  # memory bound
+    assert rl.processor_roofline(100.0, 10.0, 50.0) == 100.0  # compute bound
+
+
+def test_concurrent_roofline_eq2():
+    assert rl.concurrent_config_roofline(512, 1.77, 10.0) == pytest.approx(17.7)
+    assert rl.concurrent_config_roofline(512, 1.77, 1e9) == 512
+
+
+def test_sequential_roofline_eq3_asymptotics():
+    # approaches the concurrent roofline from below, never exceeds it
+    for i_oc in (1.0, 10.0, 100.0, 1e4, 1e8):
+        seq = rl.sequential_config_roofline(512, 1.77, i_oc)
+        conc = rl.concurrent_config_roofline(512, 1.77, i_oc)
+        assert seq < conc or math.isclose(seq, conc, rel_tol=1e-6)
+    assert rl.sequential_config_roofline(512, 1.77, 1e12) == pytest.approx(512, rel=1e-3)
+
+
+def test_knee_point_equal_time():
+    # at the knee, configuration and computation take equal time: seq = peak/2
+    knee = rl.knee_point(512, 1.77)
+    seq = rl.sequential_config_roofline(512, 1.77, knee)
+    assert seq == pytest.approx(256, rel=1e-6)
+
+
+def test_effective_bandwidth_eq4():
+    bw = rl.effective_config_bandwidth(2560, t_calc=775 * 3, t_set=160 * 3)
+    assert bw == pytest.approx(0.9127, rel=1e-3)
+
+
+def test_roofsurface_eq5():
+    # configuration can bound a perfectly balanced processor roofline
+    p = rl.roofsurface(512, bw_mem=100, i_op=1e6, bw_config=1.77, i_oc=10)
+    assert p == pytest.approx(17.7)
+
+
+def test_gemmini_worked_example_theoretical():
+    bw, i_oc, util = rl.gemmini_example_theoretical()
+    assert bw == pytest.approx(16 / 9, rel=1e-6)  # ≈ 1.77 B/cycle
+    assert i_oc == pytest.approx(204.8, rel=1e-3)
+    # paper reports 41.49% (with a rounded I_OC); exact arithmetic gives 41.56%
+    assert util == pytest.approx(0.4149, abs=0.005)
+
+
+def test_gemmini_worked_example_effective():
+    bw, _, util = rl.gemmini_example_effective()
+    assert bw == pytest.approx(0.913, abs=0.002)
+    assert util == pytest.approx(0.2678, abs=0.005)  # paper: 26.78%
+
+
+def test_config_bound_predicate():
+    assert rl.config_bound(512, 1.77, 10.0)
+    assert not rl.config_bound(512, 1.77, 1e6)

@@ -1,0 +1,113 @@
+"""Continuous-batching engine + int8 KV cache tests."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models.model import Model
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), remat="none")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _greedy_reference(model, params, prompt, n_new, max_len=64):
+    """Single-sequence greedy decode, lock-step reference."""
+    cache = model.init_cache(1, max_len)
+    step = jax.jit(model.decode_step)
+    pos = 0
+    tok = None
+    for t in prompt:
+        logits, cache = step(
+            params, cache, jnp.asarray([[t]], jnp.int32), jnp.int32(pos)
+        )
+        pos += 1
+    out = []
+    tok = int(jnp.argmax(logits[0, 0]))
+    for _ in range(n_new):
+        out.append(tok)
+        logits, cache = step(
+            params, cache, jnp.asarray([[tok]], jnp.int32), jnp.int32(pos)
+        )
+        pos += 1
+        tok = int(jnp.argmax(logits[0, 0]))
+    return out
+
+
+def test_engine_matches_single_sequence_reference(small_model):
+    cfg, model, params = small_model
+    prompts = [[5, 9, 2], [7, 1], [3, 3, 3, 3]]
+    n_new = 5
+
+    refs = [
+        _greedy_reference(model, params, p, n_new - 1) for p in prompts
+    ]
+
+    engine = ServingEngine(model, params, max_slots=2, max_len=64)
+    for i, p in enumerate(prompts):
+        engine.submit(Request(uid=i, prompt=list(p), max_new_tokens=n_new))
+    finished = engine.run_until_done()
+    assert len(finished) == 3
+    by_uid = {r.uid: r for r in finished}
+    for i, ref in enumerate(refs):
+        got = by_uid[i].generated
+        assert len(got) == n_new
+        # engine's first generated token comes from the same prompt prefill;
+        # subsequent tokens follow greedy decode — compare the shared stretch
+        assert got[1 : 1 + len(ref)] == ref[: n_new - 1] or got[:n_new - 1] == ref[: n_new - 1]
+
+
+def test_engine_overlapping_lifetimes(small_model):
+    cfg, model, params = small_model
+    engine = ServingEngine(model, params, max_slots=2, max_len=32)
+    engine.submit(Request(uid=0, prompt=[1], max_new_tokens=8))
+    engine.submit(Request(uid=1, prompt=[2], max_new_tokens=2))
+    engine.submit(Request(uid=2, prompt=[3], max_new_tokens=2))  # queued
+    # one step: both live slots advance together
+    assert engine.step() == 2
+    finished = engine.run_until_done()
+    assert sorted(r.uid for r in finished) == [0, 1, 2]
+    assert all(len(r.generated) == r.max_new_tokens for r in finished)
+
+
+def test_int8_cache_decode_top1_agreement(small_model):
+    cfg, model, params = small_model
+    cfg_q = dataclasses.replace(cfg, cache_quant="int8")
+    model_q = Model(cfg_q)
+
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+
+    def run(m):
+        cache = m.init_cache(B, S)
+        step = jax.jit(m.decode_step)
+        outs = []
+        for i in range(S):
+            lg, cache = step(params, cache, toks[:, i : i + 1], jnp.int32(i))
+            outs.append(np.asarray(lg[:, 0], np.float32))
+        return np.stack(outs, 1)
+
+    a, b = run(model), run(model_q)
+    assert (a.argmax(-1) == b.argmax(-1)).mean() > 0.95
+    np.testing.assert_allclose(a, b, rtol=0.2, atol=0.5)
+
+
+def test_int8_cache_halves_bytes(small_model):
+    cfg, model, params = small_model
+    cfg_q = dataclasses.replace(cfg, cache_quant="int8")
+    model_q = Model(cfg_q)
+    def nbytes(c):
+        return sum(np.asarray(x).nbytes for x in jax.tree.leaves(c))
+    full = nbytes(model.init_cache(4, 128))
+    quant = nbytes(model_q.init_cache(4, 128))
+    # int8 + bf16 scales (D=16 heads → scale overhead 2/16): ≈ 0.56×
+    assert quant < 0.65 * full

@@ -1,0 +1,113 @@
+"""Sharding-rule unit tests (divisibility-aware TP/EP/ZeRO specs)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get
+from repro.distributed import opt_state_shardings, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim import AdamW
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    if jax.device_count() < 256:
+        pytest.skip("production mesh needs the dry-run's 512 host devices")
+    return make_production_mesh()
+
+
+def _specs(mesh, arch):
+    model = Model(get(arch))
+    params = model.abstract_params()
+    sh = param_shardings(mesh, params)
+    flat, _ = jax.tree_util.tree_flatten_with_path(sh)
+    out = {}
+    for path, s in flat:
+        key = "/".join(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p) for p in path
+        )
+        out[key] = s.spec
+    return out
+
+
+def test_spec_shapes_divide(mesh=None):
+    """Every sharded dim divides the mesh axis (checked without devices)."""
+    from repro.distributed.sharding import _spec_for_param
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    for arch in ("qwen2-0.5b", "qwen2.5-32b", "kimi-k2-1t-a32b", "rwkv6-7b"):
+        model = Model(get(arch))
+        params = model.abstract_params()
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        for path, leaf in flat:
+            names = tuple(
+                p.key if isinstance(p, jax.tree_util.DictKey) else str(p)
+                for p in path
+            )
+            spec = _spec_for_param(FakeMesh(), names, leaf.shape)
+            assert len(spec) == len(leaf.shape), (names, spec, leaf.shape)
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is not None:
+                    assert dim % 16 == 0, (names, leaf.shape, spec)
+
+
+def test_zero_shards_optimizer_states():
+    from repro.distributed.sharding import _spec_for_param
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    model = Model(get("qwen2-0.5b").reduced())
+    params = model.abstract_params()
+    opt = jax.eval_shape(AdamW().init, params)
+    # m/v/master leaves exist for every param leaf
+    n_params = len(jax.tree.leaves(params))
+    n_opt = len(jax.tree.leaves(opt))
+    assert n_opt == 3 * n_params + 1  # master, m, v (+ step)
+
+
+def test_moe_expert_dim_sharded():
+    from repro.distributed.sharding import _spec_for_param
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    # kimi: experts (61, 384, 7168, 2048) — expert dim (384) divides 16
+    spec = _spec_for_param(
+        FakeMesh(), ("layers", "moe", "wi"), (61, 384, 7168, 2048)
+    )
+    assert spec == P(None, "model", None, None)
+
+
+def test_embed_vocab_sharded_when_divisible():
+    from repro.distributed.sharding import _spec_for_param
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    assert _spec_for_param(FakeMesh(), ("embed",), (65536, 8192)) == P("model", None)
+    # 151936 = 16 × 9496: divisible — vocab sharding applies
+    assert _spec_for_param(FakeMesh(), ("embed",), (151936, 896)) == P("model", None)
+    # odd vocab: falls back to d_model
+    assert _spec_for_param(FakeMesh(), ("embed",), (51865, 1024)) == P(None, "model")
+
+
+def test_norms_replicated():
+    from repro.distributed.sharding import _spec_for_param
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    assert _spec_for_param(FakeMesh(), ("layers", "attn_norm", "w"), (24, 896)) == P(
+        None, None
+    )

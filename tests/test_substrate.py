@@ -1,0 +1,173 @@
+"""Substrate tests: data determinism/prefetch, checkpoint roundtrip +
+corruption detection, fault-tolerant supervisor, straggler monitor, dispatch
+planner + executors."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.data import SyntheticLMDataset, make_train_iterator
+from repro.dispatch import ConcurrentExecutor, ConfigPlan, SequentialExecutor, StepDescriptor
+from repro.runtime import StragglerMonitor, TrainSupervisor
+
+
+# ------------------------------------------------------------------- data
+
+
+def test_data_deterministic_across_hosts():
+    ds = SyntheticLMDataset(vocab_size=100, seq_len=8, batch_size=4, seed=7)
+    a = ds.batch(step=3, shard=1, n_shards=4)
+    b = ds.batch(step=3, shard=1, n_shards=4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch(step=3, shard=2, n_shards=4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    full = ds.batch(step=0)
+    assert full["tokens"].shape == (4, 8)
+
+
+def test_prefetch_iterator_order_and_close():
+    it = make_train_iterator(100, 8, 2, prefetch=3)
+    steps = [next(it)[0] for _ in range(5)]
+    assert steps == [0, 1, 2, 3, 4]
+    it.close()
+
+
+# --------------------------------------------------------------- checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    store.save(10, tree)
+    assert store.latest_step() == 10
+    out = store.restore(10, tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((8,))}
+    for s in (1, 2, 3, 4):
+        store.save(s, tree, blocking=False)
+        store.wait()
+    assert store.steps() == [3, 4]
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    tree = {"x": jnp.arange(16)}
+    store.save(1, tree)
+    # flip bytes in the array file
+    d = os.path.join(str(tmp_path), "step_1")
+    fn = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, fn), "r+b") as f:
+        f.seek(-4, 2)
+        f.write(b"\xde\xad\xbe\xef")
+    with pytest.raises(IOError, match="CRC"):
+        store.restore(1, tree)
+
+
+# ------------------------------------------------------------------ runtime
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+
+    @jax.jit
+    def step_fn(state, batch):
+        return state + batch
+
+    failures = {"armed": True}
+
+    def fault_hook(step):
+        if step == 7 and failures["armed"]:
+            failures["armed"] = False
+            raise RuntimeError("simulated node failure")
+
+    sup = TrainSupervisor(step_fn, store, ckpt_every=3)
+    out = sup.run(
+        jnp.zeros(()), lambda s: jnp.ones(()), 10, fault_hook=fault_hook
+    )
+    assert sup.restarts == 1
+    assert float(out) == 10.0  # replay is exact (deterministic data)
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(factor=3.0)
+    for i in range(10):
+        mon.observe(i, 0.01)
+    assert not mon.flagged
+    mon.observe(10, 0.5)
+    assert len(mon.flagged) == 1 and mon.flagged[0][0] == 10
+
+
+def test_elastic_reshard_single_device():
+    state = {"w": jnp.ones((8, 8))}
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = TrainSupervisor.reshard(state, {"w": sh})
+    assert out["w"].sharding == sh
+
+
+# ----------------------------------------------------------------- dispatch
+
+
+def test_config_plan_static_dynamic_split():
+    descs = [
+        StepDescriptor({"lr": 1e-3, "pos": i, "table": np.arange(4)})
+        for i in range(5)
+    ]
+    plan = ConfigPlan.trace(descs)
+    assert set(plan.static) == {"lr", "table"}
+    assert plan.dynamic == ["pos"]
+    # dedup shrinks per-launch config bytes: I_OC rises (§4.2)
+    assert plan.bytes_deduped(descs[0]) < plan.bytes_baseline(descs[0])
+    assert plan.i_oc_gain(descs[0]) > 2.0
+
+
+def test_executors_equivalent_results():
+    @jax.jit
+    def device_fn(state, args):
+        return state + args["x"]
+
+    def host_prep(step):
+        return {"x": jnp.float32(step)}
+
+    seq, r1 = SequentialExecutor(device_fn, host_prep).run(jnp.float32(0), 20)
+    conc, r2 = ConcurrentExecutor(device_fn, host_prep, depth=4).run(jnp.float32(0), 20)
+    assert float(seq) == float(conc)
+    assert r1.steps == r2.steps == 20
+
+
+def test_concurrent_executor_overlaps_host_prep():
+    """With host prep comparable to device time, the concurrent executor must
+    be measurably faster — the paper's §5.5 overlap on a real runtime."""
+    n = 512
+
+    @jax.jit
+    def device_fn(state, args):
+        x = state
+        for _ in range(2):
+            x = jnp.tanh(x @ state) + args["x"]
+        return x / jnp.linalg.norm(x)
+
+    def host_prep(step):
+        # blocking descriptor marshalling (T_calc); sleep (not spin) so the
+        # single-core container can actually overlap host wait with the CPU
+        # device thread — on real hardware the device runs regardless
+        time.sleep(0.004)
+        return {"x": jnp.float32(step)}
+
+    state = jnp.eye(n) + 0.01
+    device_fn(state, host_prep(0)).block_until_ready()  # compile warmup
+
+    _, seq = SequentialExecutor(device_fn, host_prep).run(state, 15)
+    _, conc = ConcurrentExecutor(device_fn, host_prep, depth=2).run(state, 15)
+    # host prep (~4 ms/step) must mostly disappear behind device time
+    assert conc.wall_s < seq.wall_s * 0.9, (seq.wall_s, conc.wall_s)

@@ -1,0 +1,99 @@
+"""Timeline rendering (Figure 2/7) + multi-accelerator dialect semantics."""
+
+from repro.core import accelerators, evaluate_levels, matmul_driver, timeline
+from repro.core.builder import Builder
+from repro.core.interp import run
+from repro.core.passes import baseline, optimize
+
+OPENGEMM = {"opengemm": accelerators.opengemm_like()}
+
+
+def test_timeline_utilization_rises_with_optimizations():
+    res = evaluate_levels(lambda: matmul_driver.opengemm_tiled_matmul(64), OPENGEMM)
+    utils = {lvl: timeline.accel_utilization(r.trace) for lvl, r in res.items()}
+    assert utils["dedup"] > utils["baseline"]
+    assert utils["both"] > utils["overlap"] > utils["baseline"]
+    assert utils["both"] > 2 * utils["baseline"]
+
+
+def test_timeline_idle_gaps_shrink():
+    res = evaluate_levels(lambda: matmul_driver.opengemm_tiled_matmul(64), OPENGEMM)
+    gap = lambda t: sum(b - a for a, b in timeline.idle_gaps(t))
+    assert gap(res["both"].trace) < 0.5 * gap(res["baseline"].trace)
+
+
+def test_timeline_render_shape():
+    res = evaluate_levels(
+        lambda: matmul_driver.opengemm_tiled_matmul(32), OPENGEMM,
+        levels=("baseline", "both"),
+    )
+    text = timeline.compare({k: r.trace for k, r in res.items()}, width=40)
+    lines = text.splitlines()
+    assert len(lines) == 2
+    assert any(c in lines[1] for c in "#+:") and "accel busy" in lines[0]
+
+
+# ------------------------------------------------------ multi-accelerator
+
+
+def _two_accel_models():
+    a = accelerators.AcceleratorModel(
+        name="gemm", p_peak=64.0, concurrent=True, host_cpi=1.0,
+        bytes_per_field=4, fields_per_write=1, instrs_per_write=2,
+        dim_fields=("M", "K", "N"),
+    )
+    b = accelerators.AcceleratorModel(
+        name="vec", p_peak=16.0, concurrent=True, host_cpi=1.0,
+        bytes_per_field=4, fields_per_write=1, instrs_per_write=2,
+        dim_fields=("M", "K", "N"),
+    )
+    return {"gemm": a, "vec": b}
+
+
+def _two_accel_program():
+    b = Builder()
+    with b.function("main"):
+        c8 = b.const(8)
+        lb, ub, one = b.index(0), b.index(4), b.index(1)
+        with b.for_(lb, ub, one) as (_, iv, _i):
+            ptr = b.add(b.const(4096), b.mul(iv, c8))
+            s1 = b.setup("gemm", {"A": ptr, "M": c8, "K": c8, "N": c8})
+            t1 = b.launch(s1, "gemm")
+            # the second accelerator's state must not alias the first's
+            s2 = b.setup("vec", {"A": ptr, "M": c8, "K": c8, "N": c8})
+            t2 = b.launch(s2, "vec")
+            b.await_(t1)
+            b.await_(t2)
+    return b.module
+
+
+def test_multi_accelerator_states_are_independent():
+    models = _two_accel_models()
+    base = _two_accel_program()
+    baseline(base)
+    log0 = run(base, models).log_signature()
+    assert {a for a, _ in log0} == {"gemm", "vec"}
+
+    opt = _two_accel_program()
+    optimize(opt, concurrent_accels={"gemm", "vec"})
+    log1 = run(opt, models).log_signature()
+    assert log1 == log0
+
+
+def test_multi_accelerator_dedup_is_per_accelerator():
+    """Writing M=8 on 'gemm' must not make M=8 on 'vec' redundant."""
+    models = _two_accel_models()
+    b = Builder()
+    with b.function("main"):
+        c8 = b.const(8)
+        s1 = b.setup("gemm", {"M": c8, "K": c8, "N": c8})
+        b.await_(b.launch(s1, "gemm"))
+        s2 = b.setup("vec", {"M": c8, "K": c8, "N": c8})
+        b.await_(b.launch(s2, "vec"))
+    m = b.module
+    base_log = run(m, models).log_signature()
+    optimize(m, concurrent_accels=set(), do_dedup=True, do_overlap=False)
+    assert run(m, models).log_signature() == base_log
+    setups = [op for op in m.walk() if op.name == "accfg.setup"]
+    # both accelerators keep their full field sets (no cross-accel dedup)
+    assert all(len(op.attrs["fields"]) == 3 for op in setups)
