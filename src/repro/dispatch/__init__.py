@@ -1,4 +1,16 @@
-from .executor import ConcurrentExecutor, SequentialExecutor
+from .executor import (
+    ConcurrentExecutor,
+    ExecReport,
+    ScheduledExecutor,
+    SequentialExecutor,
+)
 from .planner import ConfigPlan, StepDescriptor
 
-__all__ = ["ConcurrentExecutor", "ConfigPlan", "SequentialExecutor", "StepDescriptor"]
+__all__ = [
+    "ConcurrentExecutor",
+    "ConfigPlan",
+    "ExecReport",
+    "ScheduledExecutor",
+    "SequentialExecutor",
+    "StepDescriptor",
+]

@@ -1,0 +1,50 @@
+"""repro.sched — runtime scheduling against the configuration wall.
+
+The compile-time story (``core.passes``) eliminates configuration overhead
+*within one program*: dedup removes register writes whose values provably
+persist, overlap hides the rest behind accelerator busy time. A serving
+system hits the same wall again *across* programs: every dispatch re-sends
+state the device may already hold, and a single host serializes
+configuration across the whole accelerator pool.
+
+``repro.sched`` is the runtime mirror of those passes:
+
+* :mod:`~repro.sched.state_cache` — dedup at dispatch time: a per-device,
+  per-tenant-context cache of last-written register values that elides
+  redundant config writes (LRU-bounded contexts let tenants share a device).
+* :mod:`~repro.sched.queue` — overlap at dispatch time: depth-k staged
+  launch queues (OpenGeMM-style staging) with the sequential-stall fallback
+  for ``concurrent=False`` devices.
+* :mod:`~repro.sched.scheduler` — config-affinity placement: route each
+  launch to the pool device whose cached state maximizes write elision,
+  spilling on admission delay so affinity and load balance share one score.
+* :mod:`~repro.sched.telemetry` — bytes sent vs. elided, hit rates and
+  busy/idle cycles, exported as ``interp.Trace`` timelines and
+  ``RooflinePoint`` placements so scheduled pools land on the same plots as
+  compiled programs.
+"""
+
+from . import queue, scheduler, state_cache, telemetry
+from .queue import LaunchQueue, LaunchTiming
+from .scheduler import Device, LaunchRequest, Scheduler, requests_from_trace
+from .state_cache import CacheStats, ConfigStateCache, WritePlan, nbytes_of
+from .telemetry import DeviceTelemetry, SchedulerReport
+
+__all__ = [
+    "CacheStats",
+    "ConfigStateCache",
+    "Device",
+    "DeviceTelemetry",
+    "LaunchQueue",
+    "LaunchRequest",
+    "LaunchTiming",
+    "Scheduler",
+    "SchedulerReport",
+    "WritePlan",
+    "nbytes_of",
+    "queue",
+    "requests_from_trace",
+    "scheduler",
+    "state_cache",
+    "telemetry",
+]

@@ -1,0 +1,101 @@
+"""Depth-k staged launch queues — per-device dispatch timing.
+
+Models the two configuration disciplines the paper characterizes, per
+device, against a single host clock owned by the scheduler:
+
+* **Sequential** (Gemmini, §2.2): the host stalls at launch until the
+  macro-op retires. ``depth`` is irrelevant — there is never more than one
+  invocation outstanding.
+* **Concurrent** (OpenGeMM, §6.2): launches are *staged*; the host returns
+  immediately and keeps configuring the next invocation while the device
+  runs. Up to ``depth`` launches may be outstanding (the size of the staging
+  register file / descriptor ring); when the ring is full the host blocks
+  until the oldest invocation retires. ``depth=1`` degenerates to the
+  interpreter's launch-blocks-until-free model; larger depths are the
+  OpenGeMM-style ring that `dispatch.ConcurrentExecutor` realizes on the
+  real JAX runtime.
+
+The queue only does *timing*; byte accounting lives in the state cache and
+placement lives in the scheduler.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+from ..core.accelerators import AcceleratorModel
+
+
+@dataclass(frozen=True)
+class LaunchTiming:
+    """One invocation's resolved timeline."""
+
+    host_after: float  # host clock after the launch was issued
+    start: float  # device begins the macro-op
+    end: float  # macro-op retires
+    stall: float  # host cycles spent blocked on this launch
+
+
+class LaunchQueue:
+    """Launch staging for one device instance."""
+
+    def __init__(self, model: AcceleratorModel, depth: int = 2):
+        assert depth >= 1
+        self.model = model
+        self.depth = depth if model.concurrent else 1
+        self.device_free = 0.0
+        self._inflight: deque[float] = deque()  # unretired completion times
+
+    @property
+    def outstanding(self) -> int:
+        return len(self._inflight)
+
+    def backlog(self, host: float) -> float:
+        """Cycles the device is already committed beyond ``host`` — the
+        load-balance term of the placement score."""
+        return max(0.0, self.device_free - host)
+
+    def admission_delay(self, host: float) -> float:
+        """Cycles the *host* would block if it launched now (queue-full wait
+        for concurrent devices; full occupancy for sequential ones).
+
+        Pure query: the scheduler probes candidate devices with hypothetical
+        future timestamps while scoring placements, so nothing may retire
+        here — only ``submit`` advances queue state."""
+        if not self.model.concurrent:
+            return self.backlog(host)
+        live = [end for end in self._inflight if end > host]
+        if len(live) < self.depth:
+            return 0.0
+        return live[len(live) - self.depth] - host
+
+    def _retire(self, host: float) -> None:
+        while self._inflight and self._inflight[0] <= host:
+            self._inflight.popleft()
+
+    def submit(self, host: float, duration: float) -> LaunchTiming:
+        """Issue a launch at host time ``host`` (configuration already
+        written); returns the resolved timing and the new host clock."""
+        t0 = host
+        if self.model.concurrent:
+            self._retire(host)
+            # staging ring full: block until the oldest staged op frees a slot
+            while len(self._inflight) >= self.depth:
+                host = max(host, self._inflight.popleft())
+            start = max(host, self.device_free)
+        else:
+            # sequential configuration: the host is captive until retirement
+            start = max(host, self.device_free)
+        end = start + duration
+        self.device_free = end
+        if self.model.concurrent:
+            self._inflight.append(end)
+        else:
+            host = end
+        return LaunchTiming(host_after=host, start=start, end=end, stall=host - t0)
+
+    def drain(self, host: float) -> float:
+        """Host time once every staged invocation has retired."""
+        self._inflight.clear()
+        return max(host, self.device_free)

@@ -1,0 +1,222 @@
+"""Multi-accelerator runtime scheduler with config-affinity placement.
+
+A fourth runtime layer: ``compile → dispatch → schedule → execute``. The
+compile-time passes shrink one program's configuration traffic; the
+scheduler shrinks a *pool's* — it admits streams of launch requests from
+many tenants onto heterogeneous devices drawn from
+``core.accelerators.REGISTRY``, and places each launch where the device's
+cached register state makes the most of it.
+
+**Config-affinity placement.** For every candidate device the scheduler
+prices the *host-visible* cost of launching there now:
+
+    cost = T_set(delta)  +  admission delay          (concurrent devices)
+    cost = T_set(delta)  +  wait + macro-op duration (sequential devices)
+
+where ``T_set(delta)`` covers only the fields the device's
+:class:`~repro.sched.state_cache.ConfigStateCache` does not already hold for
+this tenant. A device holding the tenant's context is cheap, so streams
+naturally pin to their devices — until the staging ring backs up and the
+admission-delay term spills work to a colder device. Affinity and load
+balance fall out of a single scalar.
+
+Timing uses the same cost model as ``core.interp`` (config-write cycles per
+field, launch cycles, sequential-stall vs. staged-concurrent launches), so
+scheduler telemetry is directly comparable with compiled-program traces.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+from ..core.accelerators import REGISTRY, AcceleratorModel
+from ..core.interp import Trace
+from .queue import LaunchQueue
+from .state_cache import ConfigStateCache, WritePlan
+from .telemetry import DeviceTelemetry, SchedulerReport
+
+POLICIES = ("affinity", "round_robin", "least_loaded")
+
+
+@dataclass(frozen=True)
+class LaunchRequest:
+    """One tenant macro-op: logical GEMM dims plus extra register fields
+    (addresses, strides, zero-points ...). ``accel`` restricts placement to
+    one device kind (a ``REGISTRY`` model name); ``None`` means any."""
+
+    tenant: str
+    dims: tuple[int, int, int]  # logical (M, K, N); ops = 2·M·K·N
+    extra: dict[str, int] = field(default_factory=dict)
+    accel: str | None = None
+
+    def regs_for(self, model: AcceleratorModel) -> dict[str, int]:
+        """Materialize the register file for a device kind — logical dims
+        land in the model's ``dim_fields`` register names."""
+        regs = dict(zip(model.dim_fields, self.dims))
+        regs.update(self.extra)
+        return regs
+
+
+class Device:
+    """One pool member: an accelerator model + its cache and launch queue."""
+
+    def __init__(self, dev_id: str, model: AcceleratorModel, *,
+                 depth: int = 2, max_contexts: int = 4):
+        self.id = dev_id
+        self.model = model
+        self.cache = ConfigStateCache(
+            max_contexts=max_contexts,
+            bytes_of=lambda name, value: model.bytes_per_field,
+        )
+        self.queue = LaunchQueue(model, depth=depth)
+        self.telemetry = DeviceTelemetry(device=dev_id, model=model)
+
+    def config_cycles(self, n_fields: int) -> float:
+        """Host cycles to write ``n_fields`` registers + issue the launch
+        (same accounting as ``interp._exec_setup`` / ``_exec_launch``)."""
+        m = self.model
+        writes = -(-n_fields // m.fields_per_write) if n_fields else 0
+        return (writes * m.instrs_per_write + m.launch_instrs) * m.host_cpi
+
+
+class Scheduler:
+    """Admits multi-tenant launch streams onto a heterogeneous device pool."""
+
+    def __init__(
+        self,
+        pool: dict[str, AcceleratorModel] | None = None,
+        *,
+        depth: int = 2,
+        max_contexts: int = 4,
+        policy: str = "affinity",
+        cache_enabled: bool = True,
+    ):
+        assert policy in POLICIES, policy
+        if pool is None:
+            pool = {name: model for name, model in REGISTRY.items()}
+        self.devices = [
+            Device(dev_id, model, depth=depth, max_contexts=max_contexts)
+            for dev_id, model in pool.items()
+        ]
+        self.policy = policy
+        self.cache_enabled = cache_enabled
+        self.host = 0.0
+        self._rr = itertools.count()
+        self._placements: dict[str, dict[str, int]] = {}
+
+    @classmethod
+    def from_registry(cls, counts: dict[str, int], **kwargs) -> "Scheduler":
+        """e.g. ``Scheduler.from_registry({"gemmini": 1, "opengemm": 2})``."""
+        pool: dict[str, AcceleratorModel] = {}
+        for kind, n in counts.items():
+            for i in range(n):
+                pool[f"{kind}:{i}"] = REGISTRY[kind]
+        return cls(pool, **kwargs)
+
+    # -- placement -----------------------------------------------------------
+
+    def _candidates(self, req: LaunchRequest) -> list[Device]:
+        devs = [d for d in self.devices
+                if req.accel is None or d.model.name == req.accel]
+        if not devs:
+            raise KeyError(f"no device of kind {req.accel!r} in pool")
+        return devs
+
+    def _host_cost(self, dev: Device, req: LaunchRequest) -> float:
+        regs = req.regs_for(dev.model)
+        if self.cache_enabled:
+            n_sent = len(dev.cache.plan(req.tenant, regs).sent)
+        else:
+            n_sent = len(regs)
+        cfg_c = dev.config_cycles(n_sent)
+        issue = self.host + cfg_c
+        if dev.model.concurrent:
+            return cfg_c + dev.queue.admission_delay(issue)
+        start = max(issue, dev.queue.device_free)
+        return start + dev.model.macro_cycles(regs) - self.host
+
+    def place(self, req: LaunchRequest) -> Device:
+        devs = self._candidates(req)
+        if len(devs) == 1:
+            return devs[0]
+        if self.policy == "round_robin":
+            return devs[next(self._rr) % len(devs)]
+        if self.policy == "least_loaded":
+            return min(devs, key=lambda d: d.queue.backlog(self.host))
+        # affinity: cheapest host-visible cost; cold-cache ties (e.g. a
+        # tenant's first launch) break toward the least-loaded device so
+        # tenants spread across the pool before pinning
+        return min(devs, key=lambda d: (self._host_cost(d, req),
+                                        d.queue.backlog(self.host)))
+
+    # -- dispatch ------------------------------------------------------------
+
+    def dispatch(self, req: LaunchRequest) -> Device:
+        dev = self.place(req)
+        regs = req.regs_for(dev.model)
+        if self.cache_enabled:
+            plan = dev.cache.dispatch(req.tenant, regs)
+        else:
+            total = len(regs) * dev.model.bytes_per_field
+            plan = WritePlan(sent=dict(regs), elided={}, bytes_sent=total,
+                             bytes_elided=0, context_hit=False)
+        cfg_c = dev.config_cycles(len(plan.sent))
+        self.host += cfg_c
+        timing = dev.queue.submit(self.host, dev.model.macro_cycles(regs))
+        self.host = timing.host_after
+        dev.telemetry.record_launch(
+            tenant=req.tenant,
+            regs=regs,
+            start=timing.start,
+            end=timing.end,
+            ops=dev.model.macro_ops(regs),
+            config_cycles=cfg_c,
+            stall=timing.stall,
+            # the launch itself crosses the boundary too (cf. interp)
+            bytes_sent=plan.bytes_sent + dev.model.bytes_per_field,
+            bytes_elided=plan.bytes_elided,
+        )
+        self._placements.setdefault(req.tenant, {})
+        self._placements[req.tenant][dev.id] = (
+            self._placements[req.tenant].get(dev.id, 0) + 1
+        )
+        return dev
+
+    def invalidate(self, tenant: str | None = None) -> None:
+        """Clobber cached device state (the runtime ``effects="all"``)."""
+        for dev in self.devices:
+            dev.cache.invalidate(tenant)
+
+    # -- runs ----------------------------------------------------------------
+
+    def run(self, requests: Iterable[LaunchRequest]) -> SchedulerReport:
+        for req in requests:
+            self.dispatch(req)
+        return self.finish()
+
+    def finish(self) -> SchedulerReport:
+        makespan = max([self.host, *(d.queue.device_free for d in self.devices)])
+        return SchedulerReport(
+            makespan=makespan,
+            devices={d.id: d.telemetry for d in self.devices},
+            cache_stats={d.id: d.cache.stats for d in self.devices},
+            placements={t: dict(p) for t, p in self._placements.items()},
+        )
+
+
+def requests_from_trace(trace: Trace, tenant: str) -> list[LaunchRequest]:
+    """Admit a *compiled accfg program* into the scheduler: replay its
+    invocation log (the interpreter's observable, register snapshots at each
+    launch) as a stream of launch requests. The compile-time passes have
+    already deduplicated within the program; the scheduler's cache then
+    dedups *across* programs and tenants."""
+    reqs = []
+    for inv in trace.invocations:
+        model = REGISTRY[inv.accel]
+        dims = tuple(int(inv.regs.get(f, 0)) for f in model.dim_fields)
+        extra = {k: v for k, v in inv.regs.items() if k not in model.dim_fields}
+        reqs.append(LaunchRequest(tenant=tenant, dims=dims, extra=extra,
+                                  accel=inv.accel))
+    return reqs

@@ -1,0 +1,141 @@
+"""Scheduler telemetry — config traffic, cache effectiveness, device busy/idle.
+
+Counters accumulate per device while the scheduler runs and export into the
+repo's existing observability vocabulary: each device yields an
+``interp.Trace`` (so `timeline.compare` renders scheduler runs exactly like
+compiled-program runs — Figure 2/7 gantts) and a ``RooflinePoint`` (so a
+scheduled workload lands on the same configuration-roofline plots as §4's
+worked examples, with I_OC computed from the bytes *actually sent* — cache
+elision moves the point rightward, the runtime mirror of Figure 12)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.accelerators import AcceleratorModel
+from ..core.interp import Invocation, Trace
+from ..core.roofline import RooflinePoint
+from .state_cache import CacheStats, elision_ratio
+
+
+@dataclass
+class DeviceTelemetry:
+    """Everything observed about one device instance during a run."""
+
+    device: str
+    model: AcceleratorModel
+    invocations: list[Invocation] = field(default_factory=list)
+    config_cycles: float = 0.0  # host cycles writing this device's registers
+    stall_cycles: float = 0.0  # host cycles blocked on this device
+    busy_cycles: float = 0.0
+    total_ops: int = 0
+    bytes_sent: int = 0
+    bytes_elided: int = 0
+    launches: int = 0
+
+    def record_launch(
+        self,
+        tenant: str,
+        regs: dict,
+        start: float,
+        end: float,
+        ops: int,
+        config_cycles: float,
+        stall: float,
+        bytes_sent: int,
+        bytes_elided: int,
+    ) -> None:
+        self.invocations.append(Invocation(self.device, dict(regs), start, end))
+        self.busy_cycles += end - start
+        self.total_ops += ops
+        self.config_cycles += config_cycles
+        self.stall_cycles += stall
+        self.bytes_sent += bytes_sent
+        self.bytes_elided += bytes_elided
+        self.launches += 1
+
+    # -- derived -------------------------------------------------------------
+
+    def utilization(self, makespan: float) -> float:
+        return self.busy_cycles / makespan if makespan else 0.0
+
+    def idle_cycles(self, makespan: float) -> float:
+        return max(0.0, makespan - self.busy_cycles)
+
+    @property
+    def elision_ratio(self) -> float:
+        return elision_ratio(self.bytes_sent, self.bytes_elided)
+
+    # -- exports into the core observability vocabulary ----------------------
+
+    def trace(self, makespan: float) -> Trace:
+        """An ``interp.Trace`` over this device's invocations, renderable via
+        ``timeline.render`` / ``timeline.compare``. ``total_cycles`` is the
+        run's makespan so gantts of pool members share one time axis."""
+        t = Trace(
+            invocations=list(self.invocations),
+            host_cycles=makespan,
+            total_cycles=makespan,
+            config_cycles=self.config_cycles,
+            stall_cycles=self.stall_cycles,
+            total_ops=self.total_ops,
+            accel_busy_cycles=self.busy_cycles,
+        )
+        t._config_bytes = self.bytes_sent  # I_OC reflects elision
+        return t
+
+    def roofline_point(self, makespan: float) -> RooflinePoint:
+        bytes_sent = max(self.bytes_sent, 1)
+        return RooflinePoint(
+            name=self.device,
+            i_oc=self.total_ops / bytes_sent,
+            performance=self.total_ops / makespan if makespan else 0.0,
+            p_peak=self.model.p_peak,
+            bw_config=self.model.bw_config,
+        )
+
+
+@dataclass
+class SchedulerReport:
+    """Aggregate of one scheduler run."""
+
+    makespan: float
+    devices: dict[str, DeviceTelemetry]
+    cache_stats: dict[str, CacheStats]
+    placements: dict[str, dict[str, int]]  # tenant -> {device: launches}
+
+    @property
+    def bytes_sent(self) -> int:
+        return sum(d.bytes_sent for d in self.devices.values())
+
+    @property
+    def bytes_elided(self) -> int:
+        return sum(d.bytes_elided for d in self.devices.values())
+
+    @property
+    def elision_ratio(self) -> float:
+        return elision_ratio(self.bytes_sent, self.bytes_elided)
+
+    def hit_rate(self) -> float:
+        hits = sum(s.hits for s in self.cache_stats.values())
+        misses = sum(s.misses for s in self.cache_stats.values())
+        return hits / (hits + misses) if hits + misses else 0.0
+
+    def traces(self) -> dict[str, Trace]:
+        """Per-device timelines on a shared axis, for ``timeline.compare``."""
+        return {name: d.trace(self.makespan) for name, d in self.devices.items()}
+
+    def roofline_points(self) -> list[RooflinePoint]:
+        return [d.roofline_point(self.makespan) for d in self.devices.values()]
+
+    def utilizations(self) -> dict[str, float]:
+        return {name: d.utilization(self.makespan) for name, d in self.devices.items()}
+
+    def geomean_utilization(self) -> float:
+        utils = [u for u in self.utilizations().values()]
+        if not utils or any(u <= 0.0 for u in utils):
+            return 0.0
+        prod = 1.0
+        for u in utils:
+            prod *= u
+        return prod ** (1.0 / len(utils))

@@ -12,6 +12,13 @@ Configuration-wall connection: the per-launch descriptor is exactly
 multi-GiB cache. The engine is the deduplicated-configuration serving design
 the paper's §5.4 implies: everything invariant lives on-device; only the
 changing fields cross the host→device boundary each step.
+
+Every launch descriptor additionally flows through a
+:class:`~repro.sched.state_cache.ConfigStateCache` (``engine.config_cache``),
+the runtime dedup layer of `repro.sched`: fields bit-identical to the
+previous launch (sampling config always; the live-mask between admissions)
+are counted as device-resident rather than re-sent, and
+``engine.config_traffic()`` reports the split for roofline placement.
 """
 
 from __future__ import annotations
@@ -22,6 +29,8 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.sched.state_cache import ConfigStateCache
 
 
 @dataclass
@@ -48,6 +57,9 @@ class ServingEngine:
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        # runtime config-state cache: one context (the engine is one tenant
+        # of its device); accounts which descriptor fields actually changed
+        self.config_cache = ConfigStateCache(max_contexts=1)
 
     # ---------------------------------------------------------------- admin
 
@@ -74,6 +86,9 @@ class ServingEngine:
     def _step_single_slot(self, slot: int, token: int) -> None:
         toks = self.tokens.copy()
         toks[slot, 0] = token
+        desc = self._launch_descriptor(self.live_slots)
+        desc["tokens"] = toks.copy()  # prefill launches cross the boundary too
+        self.config_cache.dispatch("engine", desc)
         pos = jnp.asarray(self.positions)
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(toks), pos
@@ -88,6 +103,7 @@ class ServingEngine:
         live = self.live_slots
         if not live:
             return 0
+        self.config_cache.dispatch("engine", self._launch_descriptor(live))
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.tokens),
             jnp.asarray(self.positions),
@@ -112,6 +128,31 @@ class ServingEngine:
                 self.slot_req[slot] = None  # slot freed for the next request
                 self.positions[slot] = 0
         return produced
+
+    def _launch_descriptor(self, live: list[int]) -> dict:
+        """The fields that parameterize one decode launch. Copies snapshot
+        the mutable host buffers so cached values stay bit-stable."""
+        mask = np.zeros((self.max_slots,), bool)
+        mask[live] = True
+        return {
+            "tokens": self.tokens.copy(),
+            "positions": self.positions.copy(),
+            "live_mask": mask,
+            # invariant sampling/shape config: elided after the first launch
+            "max_len": np.int32(self.max_len),
+            "eos_id": np.int32(-1 if self.eos_id is None else self.eos_id),
+            "n_slots": np.int32(self.max_slots),
+        }
+
+    def config_traffic(self) -> dict[str, float]:
+        """Config bytes sent vs. elided across all launches so far
+        (prefill and batch decode alike)."""
+        s = self.config_cache.stats
+        return {
+            "bytes_sent": float(s.bytes_sent),
+            "bytes_elided": float(s.bytes_elided),
+            "elision_ratio": s.elision_ratio,
+        }
 
     def run_until_done(self, max_steps: int = 10_000) -> list[Request]:
         steps = 0

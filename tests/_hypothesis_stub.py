@@ -1,0 +1,126 @@
+"""Minimal stand-in for the ``hypothesis`` API surface this suite uses.
+
+Installed into ``sys.modules`` by ``conftest.py`` *only when the real
+hypothesis package is unavailable* (it is declared in requirements.txt /
+pyproject.toml; some sandboxed runners cannot install it). Provides
+deterministic random sampling with the same decorator surface —
+``@given``/``@settings`` and the ``st.integers/booleans/lists/sampled_from/
+composite`` strategies — so the property tests still exercise many random
+programs per run. No shrinking: a failing example is reported as-is.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+from typing import Any, Callable
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw = draw_fn
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    pool = list(elements)
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10,
+          unique: bool = False) -> SearchStrategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        if not unique:
+            return [elements.draw(rng) for _ in range(n)]
+        out: list = []
+        for _ in range(200):  # bounded retry for small unique domains
+            if len(out) >= n:
+                break
+            v = elements.draw(rng)
+            if v not in out:
+                out.append(v)
+        return out
+
+    return SearchStrategy(draw)
+
+
+def composite(fn: Callable) -> Callable[..., SearchStrategy]:
+    @functools.wraps(fn)
+    def builder(*args, **kwargs) -> SearchStrategy:
+        def draw(rng: random.Random):
+            return fn(lambda strategy: strategy.draw(rng), *args, **kwargs)
+
+        return SearchStrategy(draw)
+
+    return builder
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            # deterministic per-test seed so failures reproduce across runs
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                drawn_kwargs = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn_args, **kwargs, **drawn_kwargs)
+                except Exception as exc:  # no shrinking: report the raw example
+                    raise AssertionError(
+                        f"falsifying example (#{i}): args={drawn_args!r} "
+                        f"kwargs={drawn_kwargs!r}"
+                    ) from exc
+
+        # present only the non-drawn (fixture) parameters to pytest:
+        # drawn kwargs by name, positional strategies from the tail
+        params = list(inspect.signature(fn).parameters.values())
+        params = [p for p in params if p.name not in kw_strategies]
+        if arg_strategies:
+            params = params[: -len(arg_strategies)]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__dict__["__wrapped__"]  # keep pytest off fn's signature
+        return wrapper
+
+    return decorate
+
+
+def _as_modules() -> tuple[types.ModuleType, types.ModuleType]:
+    """Build (hypothesis, hypothesis.strategies) module objects."""
+    strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "booleans", "sampled_from", "lists", "composite"):
+        setattr(strategies, name, globals()[name])
+    strategies.SearchStrategy = SearchStrategy
+
+    hypothesis = types.ModuleType("hypothesis")
+    hypothesis.given = given
+    hypothesis.settings = settings
+    hypothesis.strategies = strategies
+    hypothesis.__version__ = "0.0-stub"
+    hypothesis.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    return hypothesis, strategies
