@@ -1,0 +1,52 @@
+"""repro.cluster — multi-host open-loop serving above `repro.sched`.
+
+The paper characterizes the configuration wall for one host–accelerator
+pair; PR 1's scheduler eliminates redundant config traffic for one host's
+*pool*. This package lifts the system to production shape — many hosts,
+open-loop traffic, tail-latency SLOs — the regime where the ROADMAP's
+"heavy traffic from millions of users" lives:
+
+* :mod:`~repro.cluster.traffic` — deterministic open-loop workload
+  generation: Poisson / bursty (MMPP) / diurnal arrival processes over
+  tenant-mix profiles drawn from the ``configs/`` model zoo, stamping
+  ``arrival_time`` (and priority class) onto every ``LaunchRequest``.
+* :mod:`~repro.cluster.host` — a :class:`Host` wraps one scheduler shard of
+  the device pool behind a *serialized config-write port*: concurrent
+  devices still contend for one control thread, so T_set amplifies with
+  pool width (Colagrande & Benini's offload amplification).
+* :mod:`~repro.cluster.router` — cross-host placement: the config-affinity
+  scalar extended with port congestion and tenant-context residency, plus
+  ``round_robin`` / ``jsq`` / ``p2c`` baselines, and the :class:`Cluster`
+  drain loop.
+* :mod:`~repro.cluster.slo` — per-tenant queueing-delay/latency percentiles
+  (p50/p95/p99), SLO attainment and goodput, exported as ``interp.Trace``
+  timelines and per-host configuration-roofline points so cluster runs plot
+  beside compiled programs.
+
+The full runtime stack is now ``compile → dispatch → schedule → route``.
+"""
+
+from . import host, router, slo, traffic
+from .host import Host
+from .router import ROUTERS, Cluster, Router
+from .slo import ClusterReport, TenantSLO, build_report, percentile
+from .traffic import ARRIVALS, TenantProfile, generate, slo_targets
+
+__all__ = [
+    "ARRIVALS",
+    "Cluster",
+    "ClusterReport",
+    "Host",
+    "ROUTERS",
+    "Router",
+    "TenantProfile",
+    "TenantSLO",
+    "build_report",
+    "generate",
+    "host",
+    "percentile",
+    "router",
+    "slo",
+    "slo_targets",
+    "traffic",
+]

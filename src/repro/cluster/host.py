@@ -1,0 +1,152 @@
+"""One cluster host: a shard of the device pool behind a serialized
+config-write port.
+
+The paper measures configuration overhead for one host–accelerator pair;
+Colagrande & Benini show the overhead *amplifies* when several devices hang
+off one control processor — every device's ``T_set`` competes for the same
+host pipeline, so config writes that could proceed in parallel across
+devices serialize in time. `repro.sched`'s single host clock already *is*
+that control thread: a :class:`Host` wraps one :class:`~repro.sched.Scheduler`
+(its shard of the pool) and exposes the clock as the **config port** — the
+resource cross-host routing must keep un-congested.
+
+What the router reads off a host:
+
+* :meth:`port_backlog` — how far the host's control thread has committed
+  beyond the cluster wall clock: arriving work waits at least this long
+  before its first config write (the offload-amplification term).
+* :meth:`probe_cost` — the scheduler's config-affinity scalar for the best
+  device of the shard (T_set of the delta + admission delay), i.e. warm
+  tenant contexts make a host cheap.
+* :meth:`warm_bytes` — how many of the request's config bytes this host's
+  caches could elide right now (tenant-context residency).
+"""
+
+from __future__ import annotations
+
+from ..core.accelerators import REGISTRY, AcceleratorModel
+from ..core.roofline import RooflinePoint, host_roofline_point
+from ..sched.scheduler import Device, LaunchRequest, Scheduler
+from ..sched.telemetry import SchedulerReport
+
+
+class Host:
+    """One control processor owning a shard of the device pool."""
+
+    def __init__(
+        self,
+        host_id: str,
+        pool: dict[str, AcceleratorModel],
+        *,
+        depth: int = 2,
+        max_contexts: int = 4,
+        policy: str = "affinity",
+        cache_enabled: bool = True,
+    ):
+        self.id = host_id
+        self.sched = Scheduler(pool, depth=depth, max_contexts=max_contexts,
+                               policy=policy, cache_enabled=cache_enabled)
+
+    @classmethod
+    def from_registry(cls, host_id: str, counts: dict[str, int],
+                      **kwargs) -> "Host":
+        """e.g. ``Host.from_registry("h0", {"gemmini": 1, "opengemm": 1})`` —
+        device ids are namespaced ``h0/gemmini:0`` so merged cluster
+        telemetry stays unambiguous."""
+        pool = {
+            f"{host_id}/{kind}:{i}": REGISTRY[kind]
+            for kind, n in counts.items()
+            for i in range(n)
+        }
+        return cls(host_id, pool, **kwargs)
+
+    # -- state the router reads ---------------------------------------------
+
+    @property
+    def clock(self) -> float:
+        """The host control thread's committed time (the config port)."""
+        return self.sched.host
+
+    @property
+    def devices(self) -> list[Device]:
+        return self.sched.devices
+
+    def kinds(self) -> set[str]:
+        return {d.model.name for d in self.sched.devices}
+
+    def can_serve(self, req: LaunchRequest) -> bool:
+        return req.accel is None or req.accel in self.kinds()
+
+    @property
+    def launches(self) -> int:
+        """Cumulative launches dispatched here (the router's long-run
+        load signal for cold-tie spreading)."""
+        return sum(d.telemetry.launches for d in self.sched.devices)
+
+    def port_backlog(self, now: float) -> float:
+        """Cycles of config work already committed past the wall clock —
+        a request routed here waits at least this long for the port."""
+        return max(0.0, self.sched.host - now)
+
+    def probe_cost(self, req: LaunchRequest, now: float,
+                   stickiness: float = 0.0) -> float:
+        """Host-visible cycles from ``now`` until this host would have the
+        request's launch issued: port congestion first, then the scheduler's
+        config-affinity cost on the shard's best device — minus the
+        residency credit when the router passes its ``stickiness``."""
+        return self.port_backlog(now) + self.sched.probe_cost(req, now,
+                                                              stickiness)
+
+    def _elidable_per_device(self, req: LaunchRequest):
+        """(device, elidable config bytes) over the shard's eligible devices."""
+        for dev in self.sched.devices:
+            if req.accel is not None and dev.model.name != req.accel:
+                continue
+            yield dev, dev.cache.elidable_bytes(req.tenant, req.regs_for(dev.model))
+
+    def warm_bytes(self, req: LaunchRequest) -> int:
+        """Config bytes the host's caches would elide for this request —
+        the tenant-context residency signal (0 on a cold host)."""
+        return max((b for _, b in self._elidable_per_device(req)), default=0)
+
+    def residency_cycles(self, req: LaunchRequest) -> float:
+        """Config-write cycles a resident context saves on one launch of
+        this request (elidable bytes priced at the device's configuration
+        bandwidth) — the router weighs this beyond the single launch,
+        since residency keeps paying on the tenant's future stream."""
+        return max((b / dev.model.bw_config
+                    for dev, b in self._elidable_per_device(req)), default=0.0)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def dispatch(self, req: LaunchRequest) -> Device:
+        return self.sched.dispatch(req)
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self) -> SchedulerReport:
+        return self.sched.finish()
+
+    def port_utilization(self, makespan: float) -> float:
+        """Fraction of the run the control thread spent writing config —
+        the offload-amplification observable (→1.0 means the host pipeline,
+        not any accelerator, is the bottleneck)."""
+        if not makespan:
+            return 0.0
+        return sum(d.telemetry.config_cycles for d in self.sched.devices) / makespan
+
+    def roofline_point(self, makespan: float) -> RooflinePoint:
+        """This host on the configuration roofline: P_peak sums the shard,
+        BW_cfg is the serialized port's effective bandwidth (Eq. 4)."""
+        devs = self.sched.devices
+        total_ops = sum(d.telemetry.total_ops for d in devs)
+        config_bytes = sum(d.telemetry.bytes_sent for d in devs)
+        config_cycles = sum(d.telemetry.config_cycles for d in devs)
+        return host_roofline_point(
+            self.id,
+            total_ops=total_ops,
+            config_bytes=max(config_bytes, 1),
+            config_cycles=config_cycles,
+            makespan=makespan,
+            p_peak=sum(d.model.p_peak for d in devs),
+        )

@@ -1,0 +1,148 @@
+"""Cross-host placement and the cluster drain loop.
+
+PR 1's scheduler collapses device choice *within one host* to a single
+scalar (T_set of the config delta + admission delay). The router lifts the
+same idea one level: choose the **host**, pricing
+
+    route cost = port congestion          (serialized config writes queued
+                                           ahead on the host control thread)
+               + config-affinity cost     (the shard's best device: T_set of
+                                           the delta given resident tenant
+                                           contexts + admission delay)
+
+so tenants pin to the hosts that hold their warm
+:class:`~repro.sched.state_cache.ConfigStateCache` contexts until port
+congestion spills them — affinity and load balance again fall out of one
+number. Classical routers ride along for comparison, ``POLICIES``-style:
+
+* ``round_robin`` — the naive baseline; migrating tenants across hosts
+  thrashes every context cache.
+* ``jsq`` — join-shortest-queue on port backlog (load-aware, cache-blind).
+* ``p2c`` — power-of-two-choices: two deterministic random candidates, pick
+  the lesser backlog (the classic low-coordination router).
+* ``affinity`` — the cost above.
+
+:class:`Cluster` owns the hosts and the event loop: requests are drained in
+arrival order (ties to higher priority), routed, dispatched, and the merged
+per-host reports become a :class:`~repro.cluster.slo.ClusterReport`.
+"""
+
+from __future__ import annotations
+
+import itertools
+import random
+import zlib
+from typing import Iterable, Mapping, Sequence
+
+from ..sched.scheduler import LaunchRequest, arrival_order
+from .host import Host
+from .slo import ClusterReport, build_report
+
+ROUTERS = ("affinity", "round_robin", "jsq", "p2c")
+
+
+def _rendezvous(tenant: str, host_id: str) -> int:
+    """Highest-random-weight score: a deterministic, hash-seed-independent
+    per-(tenant, host) weight for breaking otherwise-symmetric ties."""
+    return zlib.crc32(f"{tenant}@{host_id}".encode())
+
+
+class Router:
+    """Pluggable cross-host placement policy."""
+
+    def __init__(self, hosts: Sequence[Host], policy: str = "affinity",
+                 seed: int = 0, stickiness: float = 4.0):
+        assert policy in ROUTERS, policy
+        assert hosts, "need at least one host"
+        self.hosts = list(hosts)
+        self.policy = policy
+        # affinity hysteresis: a warm context's per-launch savings are
+        # credited ~stickiness launches ahead, so transient port-backlog
+        # spikes (one sequential macro-op deep) don't evict a residency
+        # that keeps paying — yet a saturated port still spills, because
+        # backlog grows without bound while the bonus is capped
+        self.stickiness = stickiness
+        self._rr = itertools.count()
+        self._rng = random.Random(seed)  # deterministic p2c sampling
+
+    def _eligible(self, req: LaunchRequest) -> list[Host]:
+        hosts = [h for h in self.hosts if h.can_serve(req)]
+        if not hosts:
+            raise KeyError(f"no host carries a {req.accel!r} device")
+        return hosts
+
+    def route(self, req: LaunchRequest, now: float) -> Host:
+        hosts = self._eligible(req)
+        if len(hosts) == 1:
+            return hosts[0]
+        if self.policy == "round_robin":
+            return hosts[next(self._rr) % len(hosts)]
+        if self.policy == "jsq":
+            return min(hosts, key=lambda h: (h.port_backlog(now), h.id))
+        if self.policy == "p2c":
+            a, b = self._rng.sample(hosts, 2)
+            return min((a, b), key=lambda h: (h.port_backlog(now), h.id))
+        # affinity: cheapest end-to-end host-visible cost, minus the
+        # residency credit (warm contexts are worth ~stickiness launches of
+        # elision, not one). Cost ties (e.g. every host cold for this
+        # tenant) break toward the least-loaded host so tenants spread
+        # across the cluster before pinning — the router-level twin of the
+        # scheduler's cold-tie rule — and residual full ties use rendezvous
+        # hashing, giving each tenant a stable deterministic home instead
+        # of herding onto the first host id
+        return min(hosts, key=lambda h: (
+            h.probe_cost(req, now, self.stickiness),
+            h.port_backlog(now),
+            h.launches,
+            -_rendezvous(req.tenant, h.id),
+        ))
+
+
+class Cluster:
+    """A pool of hosts + a router: the open-loop serving fabric."""
+
+    def __init__(self, hosts: Sequence[Host], *, policy: str = "affinity",
+                 seed: int = 0):
+        self.hosts = list(hosts)
+        self.router = Router(self.hosts, policy=policy, seed=seed)
+
+    @classmethod
+    def uniform(
+        cls,
+        n_hosts: int,
+        counts: Mapping[str, int],
+        *,
+        policy: str = "affinity",
+        depth: int = 2,
+        max_contexts: int = 4,
+        host_policy: str = "affinity",
+        cache_enabled: bool = True,
+        seed: int = 0,
+    ) -> "Cluster":
+        """``Cluster.uniform(4, {"gemmini": 1, "opengemm": 1})`` — n
+        identical hosts, each carrying one shard of the mixed pool."""
+        hosts = [
+            Host.from_registry(f"h{i}", dict(counts), depth=depth,
+                               max_contexts=max_contexts, policy=host_policy,
+                               cache_enabled=cache_enabled)
+            for i in range(n_hosts)
+        ]
+        return cls(hosts, policy=policy, seed=seed)
+
+    def dispatch(self, req: LaunchRequest) -> Host:
+        host = self.router.route(req, now=req.arrival_time)
+        host.dispatch(req)
+        return host
+
+    def run(
+        self,
+        requests: Iterable[LaunchRequest],
+        *,
+        slo: Mapping[str, float] | None = None,
+    ) -> ClusterReport:
+        """Event-driven drain: route and dispatch in arrival order, then
+        fold every host's scheduler report into one cluster report (``slo``
+        maps tenant → latency target in cycles, cf. ``traffic.slo_targets``)."""
+        for req in sorted(requests, key=arrival_order):
+            self.dispatch(req)
+        return build_report(self.hosts, slo=slo)

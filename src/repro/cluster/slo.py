@@ -1,0 +1,196 @@
+"""SLO-percentile telemetry for open-loop cluster runs.
+
+Closed-loop reports end at makespan and utilization; an open-loop serving
+system is judged on its *tails*: the p99 of the queueing delay (arrival →
+device start) and the fraction of launches finishing inside each tenant's
+latency target. This module folds every host's
+:class:`~repro.sched.telemetry.SchedulerReport` — specifically the
+per-launch :class:`~repro.sched.telemetry.LaunchRecord` logs — into one
+:class:`ClusterReport`:
+
+* per-tenant p50/p95/p99 queueing delay and latency,
+* SLO attainment (fraction of launches with ``latency ≤ slo_cycles``) and
+  **goodput** (ops of SLO-meeting launches per cycle — work that was worth
+  doing),
+* config-byte traffic and preemption counts summed across hosts,
+* per-host ``interp.Trace`` timelines on one shared time axis and per-host
+  configuration-roofline points (serialized-port effective bandwidth), so a
+  cluster run lands on the same plots as a single compiled program.
+
+Percentiles use deterministic linear interpolation (no numpy dependency at
+this layer, bit-stable across platforms).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+from ..core.interp import Trace
+from ..core.roofline import RooflinePoint
+from ..sched.state_cache import elision_ratio
+from ..sched.telemetry import LaunchRecord, SchedulerReport
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """The q-th percentile (0 ≤ q ≤ 100) by linear interpolation between
+    order statistics — numpy's default method, implemented deterministically."""
+    assert 0.0 <= q <= 100.0
+    if not values:
+        return 0.0
+    vals = sorted(values)
+    if len(vals) == 1:
+        return vals[0]
+    pos = (q / 100.0) * (len(vals) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(vals) - 1)
+    frac = pos - lo
+    return vals[lo] * (1.0 - frac) + vals[hi] * frac
+
+
+@dataclass(frozen=True)
+class TenantSLO:
+    """One tenant's open-loop service quality over a run."""
+
+    tenant: str
+    launches: int
+    p50_queue: float
+    p95_queue: float
+    p99_queue: float
+    p50_latency: float
+    p95_latency: float
+    p99_latency: float
+    slo_cycles: float | None  # None = best effort, attainment vacuously 1
+    attainment: float  # fraction of launches with latency <= slo_cycles
+    total_ops: int
+    good_ops: int  # ops of launches that met the SLO
+
+    @classmethod
+    def from_records(cls, tenant: str, records: Sequence[LaunchRecord],
+                     slo_cycles: float | None) -> "TenantSLO":
+        queues = [r.queue_delay for r in records]
+        lats = [r.latency for r in records]
+        if slo_cycles is None:
+            met = list(records)
+        else:
+            met = [r for r in records if r.latency <= slo_cycles]
+        return cls(
+            tenant=tenant,
+            launches=len(records),
+            p50_queue=percentile(queues, 50),
+            p95_queue=percentile(queues, 95),
+            p99_queue=percentile(queues, 99),
+            p50_latency=percentile(lats, 50),
+            p95_latency=percentile(lats, 95),
+            p99_latency=percentile(lats, 99),
+            slo_cycles=slo_cycles,
+            attainment=len(met) / len(records) if records else 1.0,
+            total_ops=sum(r.ops for r in records),
+            good_ops=sum(r.ops for r in met),
+        )
+
+
+@dataclass
+class ClusterReport:
+    """Aggregate of one open-loop cluster run."""
+
+    makespan: float
+    hosts: dict[str, SchedulerReport]
+    tenants: dict[str, TenantSLO]
+    records: list[LaunchRecord]
+    port_utilization: dict[str, float]  # host -> config-port duty cycle
+    roofline: list[RooflinePoint]  # one point per host (serialized port)
+
+    # -- traffic -------------------------------------------------------------
+
+    @property
+    def bytes_sent(self) -> int:
+        return sum(rep.bytes_sent for rep in self.hosts.values())
+
+    @property
+    def bytes_elided(self) -> int:
+        return sum(rep.bytes_elided for rep in self.hosts.values())
+
+    @property
+    def elision_ratio(self) -> float:
+        return elision_ratio(self.bytes_sent, self.bytes_elided)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(rep.preemptions for rep in self.hosts.values())
+
+    @property
+    def launches(self) -> int:
+        return len(self.records)
+
+    # -- tails ---------------------------------------------------------------
+
+    def queue_delay_percentile(self, q: float) -> float:
+        """Cluster-wide queueing-delay percentile over every launch."""
+        return percentile([r.queue_delay for r in self.records], q)
+
+    def latency_percentile(self, q: float) -> float:
+        return percentile([r.latency for r in self.records], q)
+
+    @property
+    def attainment(self) -> float:
+        """Launch-weighted SLO attainment across tenants with targets."""
+        bound = [t for t in self.tenants.values() if t.slo_cycles is not None]
+        total = sum(t.launches for t in bound)
+        if not total:
+            return 1.0
+        return sum(t.attainment * t.launches for t in bound) / total
+
+    @property
+    def goodput(self) -> float:
+        """Ops per cycle delivered *within* SLO — throughput that counts."""
+        if not self.makespan:
+            return 0.0
+        return sum(t.good_ops for t in self.tenants.values()) / self.makespan
+
+    # -- plots ---------------------------------------------------------------
+
+    def traces(self) -> dict[str, Trace]:
+        """Per-device timelines across every host on one shared time axis
+        (device ids are host-namespaced), for ``timeline.compare``."""
+        return {
+            dev_id: tel.trace(self.makespan)
+            for rep in self.hosts.values()
+            for dev_id, tel in rep.devices.items()
+        }
+
+    def placements(self) -> dict[str, dict[str, int]]:
+        """tenant -> host -> launches (how hard each router shuffles)."""
+        out: dict[str, dict[str, int]] = {}
+        for host_id, rep in self.hosts.items():
+            for tenant, devs in rep.placements.items():
+                n = sum(devs.values())
+                out.setdefault(tenant, {})
+                out[tenant][host_id] = out[tenant].get(host_id, 0) + n
+        return out
+
+
+def build_report(hosts, *, slo: Mapping[str, float] | None = None) -> ClusterReport:
+    """Fold a list of :class:`~repro.cluster.host.Host` into one report."""
+    slo = dict(slo or {})
+    reports = {h.id: h.report() for h in hosts}
+    makespan = max([rep.makespan for rep in reports.values()] + [0.0])
+    records: list[LaunchRecord] = []
+    for rep in reports.values():
+        records.extend(rep.launch_log())
+    records.sort(key=lambda r: (r.arrival, r.issue, r.tenant))
+    by_tenant: dict[str, list[LaunchRecord]] = {}
+    for rec in records:
+        by_tenant.setdefault(rec.tenant, []).append(rec)
+    tenants = {
+        t: TenantSLO.from_records(t, recs, slo.get(t))
+        for t, recs in sorted(by_tenant.items())
+    }
+    return ClusterReport(
+        makespan=makespan,
+        hosts=reports,
+        tenants=tenants,
+        records=records,
+        port_utilization={h.id: h.port_utilization(makespan) for h in hosts},
+        roofline=[h.roofline_point(makespan) for h in hosts],
+    )

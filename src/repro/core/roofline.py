@@ -88,6 +88,36 @@ class RooflinePoint:
         return self.performance / self.p_peak
 
 
+def host_roofline_point(
+    name: str,
+    *,
+    total_ops: float,
+    config_bytes: float,
+    config_cycles: float,
+    makespan: float,
+    p_peak: float,
+    calc_cycles: float = 0.0,
+) -> RooflinePoint:
+    """Configuration-roofline placement for one *host* of a cluster.
+
+    Every device behind one control processor shares a serialized config
+    port (Colagrande & Benini's offload amplification), so the host's
+    ``BW_cfg`` is the port's *effective* bandwidth (Eq. 4 over the cycles
+    the port actually spent writing plus computing parameters) and its
+    ``P_peak`` is the sum over the pool — adding devices raises the roof
+    but leaves the config bandwidth fixed, pushing the knee point right.
+    """
+    t_set = max(config_cycles, 1e-12)
+    bw = effective_config_bandwidth(config_bytes, calc_cycles, t_set)
+    return RooflinePoint(
+        name=name,
+        i_oc=total_ops / max(config_bytes, 1e-12),
+        performance=total_ops / makespan if makespan else 0.0,
+        p_peak=p_peak,
+        bw_config=bw,
+    )
+
+
 # --------------------------------------------------------------------------
 # §4.6 worked example: Gemmini output-stationary 64×64×64 matmul
 # --------------------------------------------------------------------------

@@ -127,48 +127,99 @@ def _leaf_bytes(name, v) -> int:
 class ScheduledExecutor:
     """Concurrent staging + runtime descriptor deduplication.
 
-    Each step's launch descriptor (the pytree ``host_prep`` returns) flows
-    through a :class:`~repro.sched.state_cache.ConfigStateCache`: fields
-    bit-identical to the previous launch are elided from the traffic
-    accounting — they are device-resident state, exactly like an unwritten
-    configuration register (§3.2/§5.4 at the runtime layer). The device
-    still sees the full argument tree; what the report splits out is how
-    many descriptor bytes actually needed to cross the boundary.
+    Each launch descriptor (a pytree) flows through a
+    :class:`~repro.sched.state_cache.ConfigStateCache`: fields bit-identical
+    to the previous launch are elided from the traffic accounting — they are
+    device-resident state, exactly like an unwritten configuration register
+    (§3.2/§5.4 at the runtime layer). The device still sees the full
+    argument tree; what the report splits out is how many descriptor bytes
+    actually needed to cross the boundary.
+
+    Two entry points: the batch :meth:`run` loop (``host_prep`` builds each
+    step's descriptor), and the incremental :meth:`launch` API that stateful
+    callers — ``serving.ServingEngine``'s decode loop — drive one launch at
+    a time while the executor keeps the staging ring and the traffic
+    accounting. ``host_prep`` may be ``None`` for incremental use.
     """
 
-    def __init__(self, device_fn, host_prep, depth: int = 2, tenant: str = "exec"):
+    def __init__(self, device_fn, host_prep=None, depth: int = 2,
+                 tenant: str = "exec", sync_fn=None):
         from repro.sched.state_cache import ConfigStateCache
 
         self.device_fn = device_fn
         self.host_prep = host_prep
         self.depth = depth
         self.tenant = tenant
+        # what the staging ring blocks on: a sub-tree of device_fn's return
+        # that is never donated to a later launch (callers whose device_fn
+        # donates buffers — the serving engine's KV cache — pick the
+        # per-launch output, e.g. the logits)
+        self.sync_fn = sync_fn or (lambda out: out)
         self.cache = ConfigStateCache(max_contexts=1, bytes_of=_leaf_bytes)
+        self._inflight: deque = deque()
+        self._steps = 0
+        self._prep_s = 0.0
+        self._sent = 0
+        self._elided = 0
+
+    @property
+    def launches(self) -> int:
+        return self._steps
+
+    def launch(self, state, args):
+        """One staged launch: route ``args`` through the descriptor cache,
+        dispatch asynchronously, and block only when the staging ring
+        exceeds ``depth`` — returns whatever ``device_fn`` returned, still
+        in flight.
+
+        No-aliasing contract: numpy leaves of ``args`` are cached by
+        reference, so callers must not mutate a leaf in place between
+        launches (pass a fresh array or a copy, as the serving engine's
+        descriptors do) — otherwise the changed field compares equal to
+        itself and is misreported as elided."""
+        tp = time.perf_counter()
+        # the cache comparison is host descriptor work: count it as prep
+        # (T_calc), and compare host-side views so accounting never forces
+        # a device sync mid-pipeline
+        leaves, _ = jax.tree_util.tree_flatten_with_path(args)
+        plan = self.cache.dispatch(
+            self.tenant,
+            {jax.tree_util.keystr(k): _host_view(v) for k, v in leaves},
+        )
+        self._prep_s += time.perf_counter() - tp
+        self._sent += plan.bytes_sent
+        self._elided += plan.bytes_elided
+        state = self.device_fn(state, args)  # async dispatch: returns early
+        self._inflight.append(self.sync_fn(state))
+        if len(self._inflight) > self.depth:
+            jax.block_until_ready(self._inflight.popleft())
+        self._steps += 1
+        return state
+
+    def drain(self) -> None:
+        """Retire every staged launch (end-of-run / engine idle barrier)."""
+        while self._inflight:
+            jax.block_until_ready(self._inflight.popleft())
+
+    def report(self, wall_s: float) -> ExecReport:
+        """Cumulative traffic split over every launch so far."""
+        n = max(self._steps, 1)
+        return ExecReport(wall_s, self._prep_s, self._steps,
+                          self._sent / n, self._elided / n)
 
     def run(self, state, n_steps: int) -> tuple[object, ExecReport]:
         t0 = time.perf_counter()
-        prep_s = 0.0
-        sent = elided = 0
-        inflight: deque = deque()
+        steps0, sent0, elided0, prep0 = (self._steps, self._sent,
+                                         self._elided, self._prep_s)
         for step in range(n_steps):
             tp = time.perf_counter()
             args = self.host_prep(step)
-            # the cache comparison is host descriptor work: count it as prep
-            # (T_calc), and compare host-side views so accounting never
-            # forces a device sync mid-pipeline
-            leaves, _ = jax.tree_util.tree_flatten_with_path(args)
-            plan = self.cache.dispatch(
-                self.tenant,
-                {jax.tree_util.keystr(k): _host_view(v) for k, v in leaves},
-            )
-            prep_s += time.perf_counter() - tp
-            sent += plan.bytes_sent
-            elided += plan.bytes_elided
-            state = self.device_fn(state, args)  # async dispatch: returns early
-            inflight.append(state)
-            if len(inflight) > self.depth:
-                jax.block_until_ready(inflight.popleft())
+            self._prep_s += time.perf_counter() - tp
+            state = self.launch(state, args)
         jax.block_until_ready(state)
         wall = time.perf_counter() - t0
         n = max(n_steps, 1)
-        return state, ExecReport(wall, prep_s, n_steps, sent / n, elided / n)
+        return state, ExecReport(
+            wall, self._prep_s - prep0, self._steps - steps0,
+            (self._sent - sent0) / n, (self._elided - elided0) / n,
+        )

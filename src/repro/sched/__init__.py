@@ -25,10 +25,10 @@ configuration across the whole accelerator pool.
 """
 
 from . import queue, scheduler, state_cache, telemetry
-from .queue import LaunchQueue, LaunchTiming
+from .queue import LaunchQueue, LaunchTiming, Staged
 from .scheduler import Device, LaunchRequest, Scheduler, requests_from_trace
 from .state_cache import CacheStats, ConfigStateCache, WritePlan, nbytes_of
-from .telemetry import DeviceTelemetry, SchedulerReport
+from .telemetry import DeviceTelemetry, LaunchRecord, SchedulerReport
 
 __all__ = [
     "CacheStats",
@@ -36,10 +36,12 @@ __all__ = [
     "Device",
     "DeviceTelemetry",
     "LaunchQueue",
+    "LaunchRecord",
     "LaunchRequest",
     "LaunchTiming",
     "Scheduler",
     "SchedulerReport",
+    "Staged",
     "WritePlan",
     "nbytes_of",
     "queue",

@@ -15,6 +15,12 @@ device, against a single host clock owned by the scheduler:
   OpenGeMM-style ring that `dispatch.ConcurrentExecutor` realizes on the
   real JAX runtime.
 
+Staged launches that have not yet *started* are preemptible: a
+higher-priority request can cancel the newest staged entry
+(:meth:`LaunchQueue.preempt_tail`) and take its ring slot — the scheduler
+re-dispatches the victim afterwards. A macro-op that already began is never
+aborted; only staging-register state is discarded.
+
 The queue only does *timing*; byte accounting lives in the state cache and
 placement lives in the scheduler.
 """
@@ -23,6 +29,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
+from typing import Any
 
 from ..core.accelerators import AcceleratorModel
 
@@ -37,6 +44,16 @@ class LaunchTiming:
     stall: float  # host cycles spent blocked on this launch
 
 
+@dataclass(frozen=True)
+class Staged:
+    """One entry in the staging ring."""
+
+    start: float  # device time the macro-op begins
+    end: float  # device time it retires
+    priority: int = 0
+    token: Any = None  # opaque scheduler handle (the LaunchRequest)
+
+
 class LaunchQueue:
     """Launch staging for one device instance."""
 
@@ -45,7 +62,7 @@ class LaunchQueue:
         self.model = model
         self.depth = depth if model.concurrent else 1
         self.device_free = 0.0
-        self._inflight: deque[float] = deque()  # unretired completion times
+        self._inflight: deque[Staged] = deque()  # unretired invocations
 
     @property
     def outstanding(self) -> int:
@@ -65,16 +82,39 @@ class LaunchQueue:
         here — only ``submit`` advances queue state."""
         if not self.model.concurrent:
             return self.backlog(host)
-        live = [end for end in self._inflight if end > host]
+        live = [s.end for s in self._inflight if s.end > host]
         if len(live) < self.depth:
             return 0.0
         return live[len(live) - self.depth] - host
 
+    def tail(self) -> Staged | None:
+        """The newest staged entry (the only preemptible one)."""
+        return self._inflight[-1] if self._inflight else None
+
+    def preempt_tail(self, host: float, priority: int) -> Staged | None:
+        """Cancel the newest staged launch iff it has not yet started at
+        ``host`` and its priority is strictly below ``priority``. Returns
+        the cancelled entry (its ``token`` lets the scheduler re-dispatch
+        the victim) or ``None`` when nothing is preemptible."""
+        if not self.model.concurrent or not self._inflight:
+            return None
+        victim = self._inflight[-1]
+        if victim.start <= host or victim.priority >= priority:
+            return None
+        self._inflight.pop()
+        # the device is committed only through the previous entry now; if the
+        # ring emptied, it runs no later than the victim would have started
+        self.device_free = (
+            self._inflight[-1].end if self._inflight else victim.start
+        )
+        return victim
+
     def _retire(self, host: float) -> None:
-        while self._inflight and self._inflight[0] <= host:
+        while self._inflight and self._inflight[0].end <= host:
             self._inflight.popleft()
 
-    def submit(self, host: float, duration: float) -> LaunchTiming:
+    def submit(self, host: float, duration: float, *, priority: int = 0,
+               token: Any = None) -> LaunchTiming:
         """Issue a launch at host time ``host`` (configuration already
         written); returns the resolved timing and the new host clock."""
         t0 = host
@@ -82,7 +122,7 @@ class LaunchQueue:
             self._retire(host)
             # staging ring full: block until the oldest staged op frees a slot
             while len(self._inflight) >= self.depth:
-                host = max(host, self._inflight.popleft())
+                host = max(host, self._inflight.popleft().end)
             start = max(host, self.device_free)
         else:
             # sequential configuration: the host is captive until retirement
@@ -90,7 +130,7 @@ class LaunchQueue:
         end = start + duration
         self.device_free = end
         if self.model.concurrent:
-            self._inflight.append(end)
+            self._inflight.append(Staged(start, end, priority, token))
         else:
             host = end
         return LaunchTiming(host_after=host, start=start, end=end, stall=host - t0)

@@ -40,16 +40,32 @@ from .telemetry import DeviceTelemetry, SchedulerReport
 POLICIES = ("affinity", "round_robin", "least_loaded")
 
 
+def arrival_order(req: "LaunchRequest") -> tuple[float, int, str]:
+    """Admission sort key for open-loop drains — arrival time, ties to
+    higher priority, then tenant for determinism. Shared by
+    :meth:`Scheduler.run_open_loop` and ``cluster.Cluster.run`` so
+    single-host and cluster runs admit identical traces identically."""
+    return (req.arrival_time, -req.priority, req.tenant)
+
+
 @dataclass(frozen=True)
 class LaunchRequest:
     """One tenant macro-op: logical GEMM dims plus extra register fields
     (addresses, strides, zero-points ...). ``accel`` restricts placement to
-    one device kind (a ``REGISTRY`` model name); ``None`` means any."""
+    one device kind (a ``REGISTRY`` model name); ``None`` means any.
+
+    ``arrival_time`` makes the request open-loop: the scheduler may not
+    issue it earlier, and queueing delay is measured from it
+    (``cluster.traffic`` stamps arrivals from Poisson/bursty/diurnal
+    processes). ``priority`` orders same-instant admissions and lets a
+    request preempt lower-priority *staged* launches (``sched.queue``)."""
 
     tenant: str
     dims: tuple[int, int, int]  # logical (M, K, N); ops = 2·M·K·N
     extra: dict[str, int] = field(default_factory=dict)
     accel: str | None = None
+    arrival_time: float = 0.0
+    priority: int = 0
 
     def regs_for(self, model: AcceleratorModel) -> dict[str, int]:
         """Materialize the register file for a device kind — logical dims
@@ -124,18 +140,24 @@ class Scheduler:
             raise KeyError(f"no device of kind {req.accel!r} in pool")
         return devs
 
-    def _host_cost(self, dev: Device, req: LaunchRequest) -> float:
+    def _probe_device(self, dev: Device, req: LaunchRequest) -> tuple[float, int]:
+        """(host-visible cost of launching here now, config bytes a resident
+        context would elide) — one cache write-plan evaluation feeds both."""
         regs = req.regs_for(dev.model)
         if self.cache_enabled:
-            n_sent = len(dev.cache.plan(req.tenant, regs).sent)
+            plan = dev.cache.plan(req.tenant, regs)
+            n_sent, elided = len(plan.sent), plan.bytes_elided
         else:
-            n_sent = len(regs)
+            n_sent, elided = len(regs), 0
         cfg_c = dev.config_cycles(n_sent)
         issue = self.host + cfg_c
         if dev.model.concurrent:
-            return cfg_c + dev.queue.admission_delay(issue)
+            return cfg_c + dev.queue.admission_delay(issue), elided
         start = max(issue, dev.queue.device_free)
-        return start + dev.model.macro_cycles(regs) - self.host
+        return start + dev.model.macro_cycles(regs) - self.host, elided
+
+    def _host_cost(self, dev: Device, req: LaunchRequest) -> float:
+        return self._probe_device(dev, req)[0]
 
     def place(self, req: LaunchRequest) -> Device:
         devs = self._candidates(req)
@@ -151,10 +173,50 @@ class Scheduler:
         return min(devs, key=lambda d: (self._host_cost(d, req),
                                         d.queue.backlog(self.host)))
 
+    def probe_cost(self, req: LaunchRequest, now: float | None = None,
+                   stickiness: float = 0.0) -> float:
+        """Host-visible cycles to place ``req`` on this scheduler's best
+        device, relative to ``max(host clock, now)`` — the clock an actual
+        dispatch at wall time ``now`` would see. ``stickiness`` credits each
+        device's resident-context elision (priced at its config bandwidth)
+        that many launches ahead, the affinity router's hysteresis term.
+        Pure query — the cross-host router's per-host term
+        (``cluster.router``); one cache write-plan per device feeds both
+        the cost and the residency credit."""
+        saved = self.host
+        if now is not None:
+            self.host = max(self.host, now)
+        try:
+            best = float("inf")
+            for dev in self._candidates(req):
+                cost, elided = self._probe_device(dev, req)
+                if stickiness:
+                    cost -= stickiness * elided / dev.model.bw_config
+                best = min(best, cost)
+            return best
+        finally:
+            self.host = saved
+
     # -- dispatch ------------------------------------------------------------
 
     def dispatch(self, req: LaunchRequest) -> Device:
+        # open-loop admission: the host idles until the request exists
+        self.host = max(self.host, req.arrival_time)
         dev = self.place(req)
+        self._dispatch_on(dev, req)
+        return dev
+
+    def _dispatch_on(self, dev: Device, req: LaunchRequest) -> None:
+        victim: LaunchRequest | None = None
+        if req.priority and dev.model.concurrent:
+            # a higher-priority arrival that would block on a full staging
+            # ring cancels the newest staged-not-started launch instead
+            if dev.queue.admission_delay(self.host) > 0.0:
+                staged = dev.queue.preempt_tail(self.host, req.priority)
+                if staged is not None and staged.token is not None:
+                    victim = staged.token
+                    dev.telemetry.record_preemption()
+                    self._placements[victim.tenant][dev.id] -= 1
         regs = req.regs_for(dev.model)
         if self.cache_enabled:
             plan = dev.cache.dispatch(req.tenant, regs)
@@ -162,9 +224,11 @@ class Scheduler:
             total = len(regs) * dev.model.bytes_per_field
             plan = WritePlan(sent=dict(regs), elided={}, bytes_sent=total,
                              bytes_elided=0, context_hit=False)
+        issue = self.host
         cfg_c = dev.config_cycles(len(plan.sent))
         self.host += cfg_c
-        timing = dev.queue.submit(self.host, dev.model.macro_cycles(regs))
+        timing = dev.queue.submit(self.host, dev.model.macro_cycles(regs),
+                                  priority=req.priority, token=req)
         self.host = timing.host_after
         dev.telemetry.record_launch(
             tenant=req.tenant,
@@ -177,12 +241,18 @@ class Scheduler:
             # the launch itself crosses the boundary too (cf. interp)
             bytes_sent=plan.bytes_sent + dev.model.bytes_per_field,
             bytes_elided=plan.bytes_elided,
+            arrival=req.arrival_time,
+            issue=issue,
+            priority=req.priority,
         )
         self._placements.setdefault(req.tenant, {})
         self._placements[req.tenant][dev.id] = (
             self._placements[req.tenant].get(dev.id, 0) + 1
         )
-        return dev
+        if victim is not None:
+            # the victim re-enters placement behind its preemptor; each hop
+            # strictly lowers the displaced priority, so this terminates
+            self.dispatch(victim)
 
     def invalidate(self, tenant: str | None = None) -> None:
         """Clobber cached device state (the runtime ``effects="all"``)."""
@@ -192,7 +262,17 @@ class Scheduler:
     # -- runs ----------------------------------------------------------------
 
     def run(self, requests: Iterable[LaunchRequest]) -> SchedulerReport:
+        """Batch admission: dispatch in the given order (closed-loop)."""
         for req in requests:
+            self.dispatch(req)
+        return self.finish()
+
+    def run_open_loop(self, requests: Iterable[LaunchRequest]) -> SchedulerReport:
+        """Event-driven drain: requests are admitted in arrival order (ties
+        go to higher priority), and the host clock idles forward whenever
+        the next arrival is still in the future — queueing delay percentiles
+        out of ``report.launch_log()`` are meaningful only under this loop."""
+        for req in sorted(requests, key=arrival_order):
             self.dispatch(req)
         return self.finish()
 

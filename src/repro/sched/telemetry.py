@@ -18,6 +18,37 @@ from ..core.roofline import RooflinePoint
 from .state_cache import CacheStats, elision_ratio
 
 
+@dataclass(frozen=True)
+class LaunchRecord:
+    """One launch's end-to-end life: arrival → issue → start → retire.
+
+    The per-request substrate for open-loop telemetry: ``cluster.slo``
+    computes queueing-delay/latency percentiles and SLO attainment from
+    these records, merged across every device of every host."""
+
+    tenant: str
+    device: str
+    arrival: float  # open-loop arrival time (0.0 for closed-loop streams)
+    issue: float  # host clock when config writes for this launch began
+    start: float  # device begins the macro-op
+    end: float  # macro-op retires
+    ops: int
+    config_cycles: float
+    bytes_sent: int
+    priority: int = 0
+
+    @property
+    def queue_delay(self) -> float:
+        """Arrival to device-start: the tail-latency term open-loop traffic
+        adds on top of service time."""
+        return self.start - self.arrival
+
+    @property
+    def latency(self) -> float:
+        """Arrival to retirement — what a tenant's SLO is written against."""
+        return self.end - self.arrival
+
+
 @dataclass
 class DeviceTelemetry:
     """Everything observed about one device instance during a run."""
@@ -25,6 +56,7 @@ class DeviceTelemetry:
     device: str
     model: AcceleratorModel
     invocations: list[Invocation] = field(default_factory=list)
+    launch_log: list[LaunchRecord] = field(default_factory=list)
     config_cycles: float = 0.0  # host cycles writing this device's registers
     stall_cycles: float = 0.0  # host cycles blocked on this device
     busy_cycles: float = 0.0
@@ -32,6 +64,8 @@ class DeviceTelemetry:
     bytes_sent: int = 0
     bytes_elided: int = 0
     launches: int = 0
+    preemptions: int = 0  # staged launches cancelled by higher priority
+    preempted_config_cycles: float = 0.0  # host work wasted on cancelled launches
 
     def record_launch(
         self,
@@ -44,8 +78,23 @@ class DeviceTelemetry:
         stall: float,
         bytes_sent: int,
         bytes_elided: int,
+        arrival: float = 0.0,
+        issue: float | None = None,
+        priority: int = 0,
     ) -> None:
         self.invocations.append(Invocation(self.device, dict(regs), start, end))
+        self.launch_log.append(LaunchRecord(
+            tenant=tenant,
+            device=self.device,
+            arrival=arrival,
+            issue=issue if issue is not None else start,
+            start=start,
+            end=end,
+            ops=ops,
+            config_cycles=config_cycles,
+            bytes_sent=bytes_sent,
+            priority=priority,
+        ))
         self.busy_cycles += end - start
         self.total_ops += ops
         self.config_cycles += config_cycles
@@ -53,6 +102,20 @@ class DeviceTelemetry:
         self.bytes_sent += bytes_sent
         self.bytes_elided += bytes_elided
         self.launches += 1
+
+    def record_preemption(self) -> None:
+        """Undo the newest launch's *device-side* accounting: the staged
+        macro-op never ran. Its config writes stay counted — that host work
+        happened and was wasted, which is exactly what the preemption
+        counters should expose."""
+        assert self.invocations, "preemption with no recorded launch"
+        inv = self.invocations.pop()
+        rec = self.launch_log.pop()
+        self.busy_cycles -= inv.end - inv.start
+        self.total_ops -= rec.ops
+        self.launches -= 1
+        self.preemptions += 1
+        self.preempted_config_cycles += rec.config_cycles
 
     # -- derived -------------------------------------------------------------
 
@@ -111,6 +174,30 @@ class SchedulerReport:
     @property
     def bytes_elided(self) -> int:
         return sum(d.bytes_elided for d in self.devices.values())
+
+    @property
+    def preemptions(self) -> int:
+        return sum(d.preemptions for d in self.devices.values())
+
+    @property
+    def config_cycles(self) -> float:
+        """Host cycles this run spent writing configuration — on one host
+        these serialize through a single control thread (the config port)."""
+        return sum(d.config_cycles for d in self.devices.values())
+
+    def launch_log(self) -> list[LaunchRecord]:
+        """Every launch of the run in issue order — the substrate for
+        queueing-delay/latency percentiles (``cluster.slo``)."""
+        records = [r for d in self.devices.values() for r in d.launch_log]
+        records.sort(key=lambda r: (r.issue, r.start, r.tenant))
+        return records
+
+    def queue_delays(self) -> dict[str, list[float]]:
+        """Per-tenant queueing delays (arrival → device start)."""
+        out: dict[str, list[float]] = {}
+        for rec in self.launch_log():
+            out.setdefault(rec.tenant, []).append(rec.queue_delay)
+        return out
 
     @property
     def elision_ratio(self) -> float:

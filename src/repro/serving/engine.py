@@ -13,11 +13,14 @@ multi-GiB cache. The engine is the deduplicated-configuration serving design
 the paper's §5.4 implies: everything invariant lives on-device; only the
 changing fields cross the host→device boundary each step.
 
-Every launch descriptor additionally flows through a
-:class:`~repro.sched.state_cache.ConfigStateCache` (``engine.config_cache``),
-the runtime dedup layer of `repro.sched`: fields bit-identical to the
-previous launch (sampling config always; the live-mask between admissions)
-are counted as device-resident rather than re-sent, and
+Every launch goes through a :class:`~repro.dispatch.ScheduledExecutor`
+(``engine.executor``): descriptor elision drives the *real* launch path,
+not just accounting. The executor's
+:class:`~repro.sched.state_cache.ConfigStateCache` (aliased as
+``engine.config_cache``) splits each descriptor into sent vs. device-resident
+fields (sampling config always; the live-mask between admissions), and its
+depth-bounded staging ring keeps prefill launches in flight while the host
+prepares the next one — the serving twin of OpenGeMM's staged configuration.
 ``engine.config_traffic()`` reports the split for roofline placement.
 """
 
@@ -30,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sched.state_cache import ConfigStateCache
+from repro.dispatch import ScheduledExecutor
 
 
 @dataclass
@@ -44,7 +47,7 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model, params, *, max_slots: int = 4, max_len: int = 256,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, launch_depth: int = 2):
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -57,9 +60,35 @@ class ServingEngine:
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
-        # runtime config-state cache: one context (the engine is one tenant
-        # of its device); accounts which descriptor fields actually changed
-        self.config_cache = ConfigStateCache(max_contexts=1)
+        # scheduled launch path: the executor owns the staging ring (depth
+        # launches in flight) and the config-state cache — one context, the
+        # engine is one tenant of its device. Its descriptor elision is the
+        # launch path itself, not a side accounting.
+        # sync on the logits: the KV cache is donated launch-to-launch, so
+        # only the per-step output is safe to block on
+        self.executor = ScheduledExecutor(self._device_fn, depth=launch_depth,
+                                          tenant="engine",
+                                          sync_fn=lambda out: out[1])
+        self.config_cache = self.executor.cache
+
+    def _device_fn(self, state, desc):
+        """One decode launch from a cached descriptor: only ``tokens`` and
+        ``positions`` parameterize the kernel; everything else in the
+        descriptor is device-resident configuration."""
+        params, cache = state
+        logits, cache = self._decode(
+            params, cache, jnp.asarray(desc["tokens"]),
+            jnp.asarray(desc["positions"]),
+        )
+        return (params, cache), logits
+
+    def _launch(self, desc: dict):
+        """Stage one launch through the executor; adopts the new KV cache
+        and returns the (possibly still in-flight) logits."""
+        (_, self.cache), logits = self.executor.launch(
+            (self.params, self.cache), desc
+        )
+        return logits
 
     # ---------------------------------------------------------------- admin
 
@@ -86,13 +115,9 @@ class ServingEngine:
     def _step_single_slot(self, slot: int, token: int) -> None:
         toks = self.tokens.copy()
         toks[slot, 0] = token
-        desc = self._launch_descriptor(self.live_slots)
-        desc["tokens"] = toks.copy()  # prefill launches cross the boundary too
-        self.config_cache.dispatch("engine", desc)
-        pos = jnp.asarray(self.positions)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(toks), pos
-        )
+        # prefill needs no logits: launches stay staged in the executor's
+        # ring, overlapping host descriptor prep with device work
+        self._launch(self._launch_descriptor(self.live_slots, tokens=toks))
         self.positions[slot] += 1
 
     # ----------------------------------------------------------------- step
@@ -103,11 +128,8 @@ class ServingEngine:
         live = self.live_slots
         if not live:
             return 0
-        self.config_cache.dispatch("engine", self._launch_descriptor(live))
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(self.positions),
-        )
+        logits = self._launch(self._launch_descriptor(live))
+        # sampling is the synchronization point: argmax needs the logits
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
         produced = 0
         for slot in live:
@@ -129,13 +151,15 @@ class ServingEngine:
                 self.positions[slot] = 0
         return produced
 
-    def _launch_descriptor(self, live: list[int]) -> dict:
+    def _launch_descriptor(self, live: list[int],
+                           tokens: np.ndarray | None = None) -> dict:
         """The fields that parameterize one decode launch. Copies snapshot
-        the mutable host buffers so cached values stay bit-stable."""
+        the mutable host buffers so cached values stay bit-stable; a
+        prefill override in ``tokens`` is already a fresh array."""
         mask = np.zeros((self.max_slots,), bool)
         mask[live] = True
         return {
-            "tokens": self.tokens.copy(),
+            "tokens": self.tokens.copy() if tokens is None else tokens,
             "positions": self.positions.copy(),
             "live_mask": mask,
             # invariant sampling/shape config: elided after the first launch
@@ -159,4 +183,5 @@ class ServingEngine:
         while (self.queue or self.live_slots) and steps < max_steps:
             self.step()
             steps += 1
+        self.executor.drain()  # retire any still-staged launches
         return self.finished

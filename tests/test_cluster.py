@@ -1,0 +1,279 @@
+"""repro.cluster: traffic determinism, arrival-process shape, per-host
+config serialization (offload amplification), router policies, SLO
+percentile telemetry, and priority preemption end-to-end."""
+
+import random
+
+import pytest
+
+from repro.cluster import (
+    Cluster,
+    Host,
+    Router,
+    TenantProfile,
+    build_report,
+    generate,
+    percentile,
+    slo_targets,
+)
+from repro.cluster.traffic import (
+    bursty_arrivals,
+    diurnal_arrivals,
+    poisson_arrivals,
+)
+from repro.sched import LaunchRequest
+
+TILE = (8, 16, 16)
+
+
+def _mix(n_per_kind=3, slo=2_000.0):
+    profiles = [
+        TenantProfile(f"og{i}", dims=TILE, accel="opengemm", slo_cycles=slo)
+        for i in range(n_per_kind)
+    ] + [
+        TenantProfile(f"gem{i}", dims=TILE, accel="gemmini", slo_cycles=slo)
+        for i in range(n_per_kind)
+    ]
+    return profiles
+
+
+# ----------------------------------------------------------- traffic
+
+
+def test_traffic_is_deterministic_for_a_fixed_seed():
+    profiles = _mix()
+    for process in ("poisson", "bursty", "diurnal"):
+        a = generate(profiles, rate=0.02, horizon=20_000, process=process, seed=11)
+        b = generate(profiles, rate=0.02, horizon=20_000, process=process, seed=11)
+        assert a == b and len(a) > 10
+        c = generate(profiles, rate=0.02, horizon=20_000, process=process, seed=12)
+        assert a != c
+
+
+def test_arrivals_are_increasing_and_inside_horizon():
+    profiles = _mix()
+    reqs = generate(profiles, rate=0.05, horizon=10_000, seed=3)
+    times = [r.arrival_time for r in reqs]
+    assert times == sorted(times)
+    assert 0.0 < times[0] and times[-1] < 10_000
+
+
+def test_poisson_hits_the_mean_rate():
+    rng = random.Random(0)
+    n = sum(1 for _ in poisson_arrivals(0.01, 1_000_000, rng))
+    assert 0.9 * 10_000 < n < 1.1 * 10_000
+
+
+def test_bursty_is_burstier_than_poisson():
+    """Same mean rate, fatter inter-arrival tail: the MMPP's squared
+    coefficient of variation must exceed the exponential's 1.0."""
+
+    def cv2(times):
+        gaps = [b - a for a, b in zip(times, times[1:])]
+        mean = sum(gaps) / len(gaps)
+        var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+        return var / mean**2
+
+    pois = list(poisson_arrivals(0.01, 500_000, random.Random(1)))
+    burst = list(bursty_arrivals(0.01, 500_000, random.Random(1)))
+    assert cv2(burst) > 1.5 * cv2(pois)
+
+
+def test_diurnal_peak_outweighs_trough():
+    """rate(t) = rate·(1+depth·sin) peaks in the first half-period and
+    troughs in the second — the halves must be visibly asymmetric."""
+    times = list(diurnal_arrivals(0.01, 100_000, random.Random(2),
+                                  period=100_000, depth=0.9))
+    first = sum(1 for t in times if t < 50_000)
+    second = len(times) - first
+    assert first > 1.5 * second
+
+
+def test_profile_from_arch_derives_pow2_tiles():
+    p = TenantProfile.from_arch("q", "qwen2-0.5b", accel="opengemm")
+    m, k, n = p.dims
+    assert all(d & (d - 1) == 0 for d in p.dims)  # powers of two
+    assert 8 <= min(p.dims) and max(p.dims) <= 64
+
+
+def test_buffer_ring_cycles_addresses():
+    p = TenantProfile("t", dims=TILE, n_bufs=2)
+    assert p.regs_extra(0) == p.regs_extra(2) != p.regs_extra(1)
+
+
+# ----------------------------------------------------------- percentiles
+
+
+def test_percentile_interpolates_like_numpy():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(vals, 0) == 1.0
+    assert percentile(vals, 50) == 2.5
+    assert percentile(vals, 100) == 4.0
+    assert percentile(vals, 25) == 1.75
+    assert percentile([], 99) == 0.0
+    assert percentile([7.0], 50) == 7.0
+
+
+# ----------------------------------------------------------- host / port
+
+
+def _stream(n, accel="opengemm", gap=10.0, tenants=4):
+    return [
+        LaunchRequest(f"t{i % tenants}", TILE,
+                      {"A": 0x1000 * (i % tenants) + 64 * i}, accel=accel,
+                      arrival_time=gap * i)
+        for i in range(n)
+    ]
+
+
+def test_port_serialization_amplifies_with_pool_width():
+    """Offload amplification: the same stream over two concurrent devices
+    behind ONE control thread queues longer than over two hosts with one
+    device each — config writes serialize on the shared port."""
+    reqs = _stream(200, gap=8.0)
+
+    one_host = Cluster([Host.from_registry("h0", {"opengemm": 2})])
+    rep1 = one_host.run([LaunchRequest(**r.__dict__) for r in reqs])
+
+    two_hosts = Cluster.uniform(2, {"opengemm": 1})
+    rep2 = two_hosts.run([LaunchRequest(**r.__dict__) for r in reqs])
+
+    assert rep2.queue_delay_percentile(99) < rep1.queue_delay_percentile(99)
+
+
+def test_host_port_backlog_and_utilization():
+    h = Host.from_registry("h0", {"opengemm": 1})
+    assert h.port_backlog(0.0) == 0.0
+    h.dispatch(LaunchRequest("t0", TILE, {"A": 1}))
+    assert h.clock > 0.0
+    assert h.port_backlog(0.0) == h.clock
+    rep = build_report([h])
+    assert 0.0 < rep.port_utilization["h0"] <= 1.0
+    (pt,) = rep.roofline
+    assert pt.name == "h0" and pt.i_oc > 0 and pt.bw_config > 0
+
+
+def test_warm_bytes_reflects_context_residency():
+    h = Host.from_registry("h0", {"opengemm": 1})
+    req = LaunchRequest("t0", TILE, {"A": 1})
+    assert h.warm_bytes(req) == 0  # cold
+    h.dispatch(req)
+    assert h.warm_bytes(req) > 0  # context resident now
+
+
+# ----------------------------------------------------------- router
+
+
+def test_router_respects_kind_restriction():
+    hosts = [Host.from_registry("h0", {"gemmini": 1}),
+             Host.from_registry("h1", {"opengemm": 1})]
+    r = Router(hosts, policy="affinity")
+    assert r.route(LaunchRequest("t", TILE, accel="gemmini"), 0.0).id == "h0"
+    with pytest.raises(KeyError):
+        Router([hosts[0]], policy="affinity").route(
+            LaunchRequest("t", TILE, accel="opengemm"), 0.0)
+
+
+def test_round_robin_alternates_and_jsq_picks_laziest():
+    hosts = [Host.from_registry(f"h{i}", {"opengemm": 1}) for i in range(2)]
+    rr = Router(hosts, policy="round_robin")
+    req = LaunchRequest("t", TILE)
+    assert [rr.route(req, 0.0).id for _ in range(4)] == ["h0", "h1", "h0", "h1"]
+
+    hosts[0].dispatch(LaunchRequest("busy", TILE, {"A": 7}))  # load h0's port
+    jsq = Router(hosts, policy="jsq")
+    assert jsq.route(req, 0.0).id == "h1"
+
+
+def test_p2c_is_deterministic_given_a_seed():
+    def picks(seed):
+        hosts = [Host.from_registry(f"h{i}", {"opengemm": 1}) for i in range(4)]
+        r = Router(hosts, policy="p2c", seed=seed)
+        return [r.route(LaunchRequest("t", TILE), 0.0).id for _ in range(8)]
+
+    assert picks(5) == picks(5)
+
+
+def test_affinity_router_pins_tenants_to_home_hosts():
+    """With one context slot per device, migrating a tenant always costs a
+    full config re-send — on a homogeneous pool (no sequential-device port
+    spikes) the affinity router must keep each tenant almost entirely on
+    its home host, and the two tenants must not share one."""
+    profiles = [TenantProfile(f"og{i}", dims=TILE, accel="opengemm")
+                for i in range(2)]
+    reqs = generate(profiles, rate=1 / 50, horizon=60_000, seed=9)
+    rep = Cluster.uniform(2, {"opengemm": 1}, policy="affinity",
+                          max_contexts=1).run(reqs)
+    homes = {}
+    for tenant, by_host in rep.placements().items():
+        total = sum(by_host.values())
+        assert max(by_host.values()) / total > 0.9, (tenant, by_host)
+        homes[tenant] = max(by_host, key=by_host.get)
+    assert homes["og0"] != homes["og1"]
+
+
+# ----------------------------------------------------------- end to end
+
+
+def test_cluster_report_accounts_every_launch():
+    profiles = _mix()
+    reqs = generate(profiles, rate=0.02, horizon=30_000, seed=4)
+    rep = Cluster.uniform(2, {"gemmini": 1, "opengemm": 1}).run(
+        reqs, slo=slo_targets(profiles))
+    assert rep.launches == len(reqs)
+    assert sum(t.launches for t in rep.tenants.values()) == len(reqs)
+    assert 0.0 <= rep.attainment <= 1.0
+    assert rep.bytes_sent > 0 and rep.elision_ratio > 0.0
+    traces = rep.traces()
+    assert len(traces) == 4  # 2 hosts x 2 devices, host-namespaced ids
+    assert all(t.total_cycles == rep.makespan for t in traces.values())
+    assert len(rep.roofline) == 2
+
+
+def test_tight_slo_fails_and_loose_slo_holds():
+    profiles = _mix()
+    reqs = generate(profiles, rate=0.02, horizon=30_000, seed=4)
+
+    def attainment(slo):
+        rep = Cluster.uniform(1, {"gemmini": 1, "opengemm": 1}).run(
+            [LaunchRequest(**r.__dict__) for r in reqs],
+            slo={p.tenant: slo for p in profiles})
+        return rep.attainment
+
+    assert attainment(1.0) < 0.1  # nothing finishes in one cycle
+    assert attainment(1e9) == 1.0
+
+
+def test_affinity_beats_round_robin_under_context_churn():
+    """The benchmark's acceptance shape, miniaturized: more tenants than
+    context slots + open-loop load ⇒ the affinity router's warm contexts
+    yield strictly fewer config bytes and a no-worse p99 queueing delay."""
+    profiles = _mix(n_per_kind=6, slo=1_500.0)
+    reqs = generate(profiles, rate=1 / 22, horizon=80_000, seed=13)
+
+    def run(policy):
+        return Cluster.uniform(2, {"gemmini": 1, "opengemm": 1},
+                               policy=policy).run(
+            [LaunchRequest(**r.__dict__) for r in reqs],
+            slo=slo_targets(profiles))
+
+    aff, rr = run("affinity"), run("round_robin")
+    assert aff.bytes_sent < rr.bytes_sent
+    assert aff.queue_delay_percentile(99) <= rr.queue_delay_percentile(99)
+    assert aff.attainment >= rr.attainment
+
+
+def test_priority_tenant_preempts_staged_launches():
+    profiles = [
+        TenantProfile(f"bulk{i}", dims=(16, 32, 32), accel="opengemm",
+                      weight=4.0)
+        for i in range(3)
+    ] + [
+        TenantProfile("vip", dims=TILE, accel="opengemm", priority=3,
+                      weight=1.0, slo_cycles=500.0)
+    ]
+    reqs = generate(profiles, rate=1 / 12, horizon=60_000, seed=21)
+    rep = Cluster.uniform(1, {"opengemm": 1}).run(reqs, slo=slo_targets(profiles))
+    assert rep.preemptions > 0
+    # the preempted work is re-dispatched, never lost
+    assert rep.launches == len(reqs)

@@ -260,6 +260,125 @@ def test_scheduled_executor_elides_static_descriptor_fields():
     assert 0 < rep.bytes_per_step < rep.bytes_elided_per_step
 
 
+# ------------------------------------------------------- edge cases (ISSUE 2)
+
+
+def test_sequential_fallback_under_deep_burst():
+    """depth>1 never lets a sequential device stage: a burst of requests
+    serializes completely, every launch stalling the host to retirement."""
+    s = Scheduler({"g": SEQ}, depth=4)
+    assert s.devices[0].queue.depth == 1  # forced down for sequential devices
+    reqs = [LaunchRequest("t0", (8, 8, 8), {"A": 64 * i}) for i in range(6)]
+    rep = s.run(reqs)
+    dev = rep.devices["g"]
+    recs = rep.launch_log()
+    # no overlap: each launch starts at or after the previous retirement
+    for a, b in zip(recs, recs[1:]):
+        assert b.start >= a.end
+    # the host was captive for every macro-op
+    assert dev.stall_cycles >= sum(r.end - r.start for r in recs)
+
+
+def test_lru_eviction_under_tenant_churn():
+    """More tenants than context slots, round-robin re-admission: every
+    dispatch is a miss and the cache degenerates to full re-sends."""
+    cache = ConfigStateCache(max_contexts=2)
+    for round_ in range(4):
+        for t in ("t0", "t1", "t2"):  # 3 tenants, 2 slots: LRU always evicts
+            plan = cache.dispatch(t, _fields())
+            assert len(plan.sent) == 5 and not plan.bytes_elided
+    assert cache.stats.hits == 0 and cache.stats.misses == 12
+    assert cache.stats.evictions == 10  # every admission after the first two
+
+
+def test_arrival_time_idles_the_host_and_sets_queue_delay():
+    s = Scheduler.from_registry({"opengemm": 1})
+    rep = s.run_open_loop([
+        LaunchRequest("t0", (8, 8, 8), {"A": 1}, arrival_time=500.0),
+        LaunchRequest("t0", (8, 8, 8), {"A": 2}, arrival_time=1_000.0),
+    ])
+    (a, b) = rep.launch_log()
+    assert a.arrival == 500.0 and a.issue == 500.0  # host idled to arrival
+    assert a.queue_delay >= 0.0 and b.latency > 0.0
+    assert rep.makespan > 1_000.0
+
+
+def test_open_loop_admits_in_arrival_order():
+    s = Scheduler.from_registry({"opengemm": 1})
+    reqs = [LaunchRequest("t0", (8, 8, 8), {"A": i},
+                          arrival_time=float(1_000 - i))
+            for i in range(4)]
+    rep = s.run_open_loop(reqs)
+    arrivals = [r.arrival for r in rep.launch_log()]
+    assert arrivals == sorted(arrivals)
+
+
+# ------------------------------------------------------------- preemption
+
+
+def test_queue_preempt_tail_cancels_only_unstarted_lower_priority():
+    q = LaunchQueue(CONC, depth=2)
+    q.submit(0.0, duration=100.0, priority=0, token="a")  # running by t=10
+    t2 = q.submit(10.0, duration=100.0, priority=0, token="b")  # staged
+    assert t2.start == 100.0
+    # "a" already started at host=10: only the tail "b" is preemptible
+    victim = q.preempt_tail(10.0, priority=1)
+    assert victim is not None and victim.token == "b"
+    assert q.outstanding == 1 and q.device_free == 100.0
+    # equal priority never preempts
+    q.submit(20.0, duration=50.0, priority=1, token="c")
+    assert q.preempt_tail(20.0, priority=1) is None
+
+
+def test_high_priority_request_preempts_staged_launch():
+    s = Scheduler.from_registry({"opengemm": 1}, depth=2)
+    big = {"A": 1, "B": 2, "C": 3, "zp": 0}
+    s.dispatch(LaunchRequest("bulk", (64, 64, 64), dict(big)))  # running
+    s.dispatch(LaunchRequest("bulk", (64, 64, 64), dict(big)))  # staged
+    # ring full (depth=2): a priority arrival would stall; instead it preempts
+    s.dispatch(LaunchRequest("vip", (8, 8, 8), {"A": 9}, priority=2))
+    rep = s.finish()
+    assert rep.preemptions == 1
+    # the victim was re-dispatched, so no launch was lost
+    assert sum(d.launches for d in rep.devices.values()) == 3
+    vip = [r for r in rep.launch_log() if r.tenant == "vip"]
+    bulk = [r for r in rep.launch_log() if r.tenant == "bulk"]
+    # vip starts before the re-dispatched bulk launch retires
+    assert vip[0].start < max(b.end for b in bulk)
+
+
+def test_priority_never_preempts_started_work():
+    s = Scheduler.from_registry({"opengemm": 1}, depth=2)
+    s.dispatch(LaunchRequest("bulk", (64, 64, 64), {"A": 1}))
+    # ring not full: priority arrival just stages normally, nothing cancelled
+    s.dispatch(LaunchRequest("vip", (8, 8, 8), {"A": 9}, priority=5))
+    rep = s.finish()
+    assert rep.preemptions == 0
+
+
+def test_scheduled_executor_incremental_launch_api():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.dispatch import ScheduledExecutor
+
+    @jax.jit
+    def device_fn(state, args):
+        return state + args["bias"]
+
+    ex = ScheduledExecutor(device_fn, depth=2)
+    state = jnp.zeros((4,))
+    for step in range(5):
+        state = ex.launch(state, {"bias": jnp.float32(1.0),
+                                  "pos": np.int32(step)})
+    ex.drain()
+    rep = ex.report(wall_s=1.0)
+    assert ex.launches == rep.steps == 5
+    assert rep.bytes_elided_per_step > 0  # bias static after first launch
+    np.testing.assert_allclose(np.asarray(state), 5.0)
+
+
 # -------------------------------------------------- property: never worse
 
 
