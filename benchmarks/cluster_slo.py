@@ -31,6 +31,7 @@ import json
 from pathlib import Path
 
 from repro.cluster import Cluster, TenantProfile, generate, slo_targets
+from repro.sched import geomean
 
 # Small decode-step tiles: 2·8·16·16 = 4096 ops/launch ⇒ 4–24 device cycles
 # against ~21–39 cycles of config writes — left of the knee point (§4.2).
@@ -104,6 +105,19 @@ def run(smoke: bool = False) -> dict:
         "horizon_cycles": horizon,
         "smoke": smoke,
         "cells": cells,
+        # cross-cell summary (CI requires every BENCH_*.json to carry one)
+        "geomean": {
+            "affinity_over_rr_goodput": geomean(
+                [c["affinity"]["goodput_ops_per_cycle"]
+                 / max(c["round_robin"]["goodput_ops_per_cycle"], 1e-9)
+                 for c in cells]),
+            "affinity_slo_attainment": geomean(
+                [c["affinity"]["slo_attainment"] for c in cells]),
+            "rr_over_affinity_p99_queue": geomean(
+                [(1.0 + c["round_robin"]["p99_queue_delay"])
+                 / (1.0 + c["affinity"]["p99_queue_delay"])
+                 for c in cells]),
+        },
     }
 
 

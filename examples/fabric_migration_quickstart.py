@@ -1,0 +1,65 @@
+"""Fabric quickstart: link classes, burst-vs-MMIO transport, a warm tenant
+migration, and cross-run context persistence in ~40 lines.
+
+Warms a tenant with a large register context on a NoC-attached host, then
+(1) shows the transport layer choosing burst DMA over per-register MMIO for
+its write plans, (2) migrates the tenant to a second host via register-
+snapshot hand-off and compares it against a cold resend, and (3) persists
+the context through the checkpoint layer so a fresh "run" resumes warm.
+
+Run: ``PYTHONPATH=src python examples/fabric_migration_quickstart.py``
+"""
+
+import tempfile
+
+from repro.cluster import Host
+from repro.core.accelerators import REGISTRY
+from repro.fabric import (
+    LINKS, ContextStore, MigrationPlanner, capture_contexts,
+    install_contexts, plan_fields,
+)
+from repro.sched import LaunchRequest
+
+# a tenant whose launches carry 24 static fields + one advancing pointer
+def request(i):
+    extra = {f"scale{j}": 3 * j for j in range(24)}
+    extra["A"] = 0x1000 + 64 * i
+    return LaunchRequest("llm-a", (8, 16, 16), extra, accel="gemmini")
+
+# 1. transport: what does one launch's write plan cost on each link class?
+gem = REGISTRY["gemmini"]
+print("write plan of 28 registers, per link class:")
+for name in ("csr", "noc", "pcie"):
+    s = plan_fields(28, gem, LINKS[name])
+    print(f"  {name:<5} -> {s.mode:<5} T_set={s.t_set:.0f} cycles "
+          f"(host {s.host_cycles:.0f} + wire {s.link_cycles:.0f})")
+
+# 2. migration: warm the source, then hand the register snapshot off
+src = Host.from_registry("src", {"gemmini": 1}, link="noc")
+for i in range(4):
+    src.dispatch(request(i))
+dst = Host.from_registry("dst", {"gemmini": 1}, link="noc")
+
+planner = MigrationPlanner(link="noc")  # policy="auto"
+probe = request(4)  # the tenant's next launch
+est = planner.estimate("llm-a", src, dst, probe)
+print(f"\nmigration estimate: warm {est.warm_cycles:.0f} vs cold "
+      f"{est.cold_cycles:.0f} cycles -> {est.mode} "
+      f"(context {est.context_fields} fields / {est.context_bytes} B; "
+      f"first-launch port bytes {est.warm_port_bytes} vs {est.cold_port_bytes})")
+rec = planner.migrate("llm-a", src, dst, probe, now=src.clock)
+dev = dst.dispatch(probe)
+print(f"executed: snapshot shipped in {rec.transfer.cycles:.0f} cycles, "
+      f"first launch at dst was a context "
+      f"{'hit' if dev.cache.stats.hits else 'miss'}")
+
+# 3. persistence: the same warmth survives a restart
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    ContextStore(ckpt_dir).save(1, capture_contexts(dst))
+    fresh = Host.from_registry("dst", {"gemmini": 1}, link="noc")
+    install_contexts(fresh, ContextStore(ckpt_dir).restore().values())
+    d = fresh.dispatch(request(5))
+    rec2 = d.telemetry.launch_log[-1]
+    print(f"\nafter restart + restore: first launch sent "
+          f"{rec2.bytes_sent} B of config (vs a cold "
+          f"{(len(probe.regs_for(gem)) + 1) * gem.bytes_per_field} B)")

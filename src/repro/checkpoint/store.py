@@ -122,6 +122,12 @@ class CheckpointStore:
         steps = self.steps()
         return steps[-1] if steps else None
 
+    def keys(self, step: int) -> list[str]:
+        """Leaf keys recorded in one step's manifest — lets callers restore
+        without already holding a template tree (``fabric.ContextStore``)."""
+        with open(os.path.join(self.directory, f"step_{step}", "manifest.json")) as f:
+            return sorted(json.load(f)["arrays"])
+
     def restore(self, step: int, like_tree, shardings=None):
         """Restore into the structure of ``like_tree``; if ``shardings`` is
         given, place each leaf with its target sharding (reshard-on-restore)."""

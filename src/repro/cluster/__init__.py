@@ -23,7 +23,10 @@ open-loop traffic, tail-latency SLOs — the regime where the ROADMAP's
   timelines and per-host configuration-roofline points so cluster runs plot
   beside compiled programs.
 
-The full runtime stack is now ``compile → dispatch → schedule → route``.
+The full runtime stack is now ``compile → dispatch → schedule → route →
+transport``: hosts name the fabric link their config port crosses
+(``repro.fabric``), and the router prices link distance alongside
+congestion and residency.
 """
 
 from . import host, router, slo, traffic

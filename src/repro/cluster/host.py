@@ -10,11 +10,18 @@ that control thread: a :class:`Host` wraps one :class:`~repro.sched.Scheduler`
 (its shard of the pool) and exposes the clock as the **config port** — the
 resource cross-host routing must keep un-congested.
 
+With `repro.fabric` the port is no longer core-local: each host names the
+interconnect its config writes cross (CSR / NoC / PCIe), the scheduler
+prices every write's T_set through it, and the wire's occupancy is logged
+on the host's :class:`~repro.fabric.link.LinkPort`.
+
 What the router reads off a host:
 
-* :meth:`port_backlog` — how far the host's control thread has committed
-  beyond the cluster wall clock: arriving work waits at least this long
-  before its first config write (the offload-amplification term).
+* :meth:`port_wait_estimate` — how far the host's control thread (and
+  fabric wire) has committed beyond the cluster wall clock: arriving work
+  waits at least this long before its first config write (the
+  offload-amplification term). :meth:`port_backlog` is its alias; probes
+  and the SLO report share this one estimate.
 * :meth:`probe_cost` — the scheduler's config-affinity scalar for the best
   device of the shard (T_set of the delta + admission delay), i.e. warm
   tenant contexts make a host cheap.
@@ -25,13 +32,20 @@ What the router reads off a host:
 from __future__ import annotations
 
 from ..core.accelerators import REGISTRY, AcceleratorModel
-from ..core.roofline import RooflinePoint, host_roofline_point
+from ..core.roofline import RooflinePoint, fabric_roofline_point, host_roofline_point
+from ..fabric.link import LinkModel
 from ..sched.scheduler import Device, LaunchRequest, Scheduler
 from ..sched.telemetry import SchedulerReport
 
 
 class Host:
-    """One control processor owning a shard of the device pool."""
+    """One control processor owning a shard of the device pool.
+
+    ``link`` names the interconnect this host's config writes cross
+    (``repro.fabric``): the default ``"csr"`` is the paper's core-local
+    port (zero wire cost), ``"noc"``/``"pcie"`` price every write's T_set
+    through the fabric transport — so two otherwise-identical hosts at
+    different link distances probe differently to the router."""
 
     def __init__(
         self,
@@ -42,10 +56,12 @@ class Host:
         max_contexts: int = 4,
         policy: str = "affinity",
         cache_enabled: bool = True,
+        link: LinkModel | str | None = None,
     ):
         self.id = host_id
         self.sched = Scheduler(pool, depth=depth, max_contexts=max_contexts,
-                               policy=policy, cache_enabled=cache_enabled)
+                               policy=policy, cache_enabled=cache_enabled,
+                               link=link)
 
     @classmethod
     def from_registry(cls, host_id: str, counts: dict[str, int],
@@ -68,6 +84,16 @@ class Host:
         return self.sched.host
 
     @property
+    def link(self) -> LinkModel:
+        """The interconnect this host's config writes cross."""
+        return self.sched.link
+
+    @property
+    def port(self):
+        """The host's fabric config port (``fabric.link.LinkPort``)."""
+        return self.sched.port
+
+    @property
     def devices(self) -> list[Device]:
         return self.sched.devices
 
@@ -83,19 +109,35 @@ class Host:
         load signal for cold-tie spreading)."""
         return sum(d.telemetry.launches for d in self.sched.devices)
 
+    def port_wait_estimate(self, req: LaunchRequest | None = None,
+                           now: float = 0.0) -> float:
+        """Cycles a request arriving at ``now`` waits before its first
+        config write can start here — the control thread's committed time.
+        The **single** backlog estimate shared by router probes
+        (:meth:`probe_cost`) and the SLO report (``cluster.slo``), so the
+        two can never drift apart. The fabric wire never outruns the
+        control thread today (the host is conservatively captive for its
+        own transfers; DMA/host overlap is a ROADMAP follow-on), and
+        ``req`` is reserved for request-dependent waits (per-tenant port
+        quotas) — currently every request sees the same wait."""
+        return max(0.0, self.sched.host - now)
+
     def port_backlog(self, now: float) -> float:
         """Cycles of config work already committed past the wall clock —
         a request routed here waits at least this long for the port."""
-        return max(0.0, self.sched.host - now)
+        return self.port_wait_estimate(now=now)
 
     def probe_cost(self, req: LaunchRequest, now: float,
                    stickiness: float = 0.0) -> float:
         """Host-visible cycles from ``now`` until this host would have the
         request's launch issued: port congestion first, then the scheduler's
         config-affinity cost on the shard's best device — minus the
-        residency credit when the router passes its ``stickiness``."""
-        return self.port_backlog(now) + self.sched.probe_cost(req, now,
-                                                              stickiness)
+        residency credit when the router passes its ``stickiness``. Link
+        distance is priced in: the scheduler's cost term carries the
+        fabric T_set (MMIO/burst over this host's link), so a host behind
+        a PCIe fabric probes expensive even when idle."""
+        return self.port_wait_estimate(req, now) + self.sched.probe_cost(
+            req, now, stickiness)
 
     def _elidable_per_device(self, req: LaunchRequest):
         """(device, elidable config bytes) over the shard's eligible devices."""
@@ -147,6 +189,26 @@ class Host:
             total_ops=total_ops,
             config_bytes=max(config_bytes, 1),
             config_cycles=config_cycles,
+            makespan=makespan,
+            p_peak=sum(d.model.p_peak for d in devs),
+        )
+
+    def fabric_roofline_point(self, makespan: float) -> RooflinePoint:
+        """This host with the interconnect split out: BW_cfg is the
+        *link-effective* config bandwidth — T_calc the host's instruction
+        cycles, T_set the cycles its config bytes spent on the wire
+        (``core.roofline.fabric_roofline_point``). On a core-local CSR
+        port the wire term is ~0 and the point degenerates to the host's
+        instruction-limited bandwidth."""
+        devs = self.sched.devices
+        config_cycles = sum(d.telemetry.config_cycles for d in devs)
+        link_cycles = self.sched.port.busy_cycles
+        return fabric_roofline_point(
+            f"{self.id}[{self.link.name}]",
+            total_ops=sum(d.telemetry.total_ops for d in devs),
+            config_bytes=max(sum(d.telemetry.bytes_sent for d in devs), 1),
+            host_cycles=max(config_cycles - link_cycles, 0.0),
+            link_cycles=link_cycles,
             makespan=makespan,
             p_peak=sum(d.model.p_peak for d in devs),
         )

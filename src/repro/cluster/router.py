@@ -5,12 +5,19 @@ scalar (T_set of the config delta + admission delay). The router lifts the
 same idea one level: choose the **host**, pricing
 
     route cost = port congestion          (serialized config writes queued
-                                           ahead on the host control thread)
+                                           ahead on the host control thread
+                                           and its fabric wire —
+                                           ``Host.port_wait_estimate``)
                + config-affinity cost     (the shard's best device: T_set of
-                                           the delta given resident tenant
+                                           the delta *over the host's fabric
+                                           link* given resident tenant
                                            contexts + admission delay)
 
-so tenants pin to the hosts that hold their warm
+Link distance is part of the affinity scalar: a host behind a NoC hop or a
+PCIe fabric carries the wire latency/bandwidth inside its T_set
+(``fabric.transport``), so the router spills to a far host only once the
+near one's congestion outweighs the distance — no separate tuning knob.
+Tenants therefore pin to the hosts that hold their warm
 :class:`~repro.sched.state_cache.ConfigStateCache` contexts until port
 congestion spills them — affinity and load balance again fall out of one
 number. Classical routers ride along for comparison, ``POLICIES``-style:
@@ -78,10 +85,10 @@ class Router:
         if self.policy == "round_robin":
             return hosts[next(self._rr) % len(hosts)]
         if self.policy == "jsq":
-            return min(hosts, key=lambda h: (h.port_backlog(now), h.id))
+            return min(hosts, key=lambda h: (h.port_wait_estimate(req, now), h.id))
         if self.policy == "p2c":
             a, b = self._rng.sample(hosts, 2)
-            return min((a, b), key=lambda h: (h.port_backlog(now), h.id))
+            return min((a, b), key=lambda h: (h.port_wait_estimate(req, now), h.id))
         # affinity: cheapest end-to-end host-visible cost, minus the
         # residency credit (warm contexts are worth ~stickiness launches of
         # elision, not one). Cost ties (e.g. every host cold for this
@@ -92,7 +99,7 @@ class Router:
         # of herding onto the first host id
         return min(hosts, key=lambda h: (
             h.probe_cost(req, now, self.stickiness),
-            h.port_backlog(now),
+            h.port_wait_estimate(req, now),
             h.launches,
             -_rendezvous(req.tenant, h.id),
         ))
@@ -118,13 +125,16 @@ class Cluster:
         host_policy: str = "affinity",
         cache_enabled: bool = True,
         seed: int = 0,
+        link=None,
     ) -> "Cluster":
         """``Cluster.uniform(4, {"gemmini": 1, "opengemm": 1})`` — n
-        identical hosts, each carrying one shard of the mixed pool."""
+        identical hosts, each carrying one shard of the mixed pool.
+        ``link`` names the fabric every host's config port crosses
+        (default: the paper's core-local CSR)."""
         hosts = [
             Host.from_registry(f"h{i}", dict(counts), depth=depth,
                                max_contexts=max_contexts, policy=host_policy,
-                               cache_enabled=cache_enabled)
+                               cache_enabled=cache_enabled, link=link)
             for i in range(n_hosts)
         ]
         return cls(hosts, policy=policy, seed=seed)

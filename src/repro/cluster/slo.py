@@ -29,7 +29,7 @@ from typing import Mapping, Sequence
 from ..core.interp import Trace
 from ..core.roofline import RooflinePoint
 from ..sched.state_cache import elision_ratio
-from ..sched.telemetry import LaunchRecord, SchedulerReport
+from ..sched.telemetry import LaunchRecord, LinkTelemetry, SchedulerReport
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -100,6 +100,11 @@ class ClusterReport:
     records: list[LaunchRecord]
     port_utilization: dict[str, float]  # host -> config-port duty cycle
     roofline: list[RooflinePoint]  # one point per host (serialized port)
+    # host -> residual port wait when the run's last request arrived — the
+    # same Host.port_wait_estimate the router probes, so telemetry and
+    # routing can never disagree about backlog
+    port_wait: dict[str, float]
+    fabric_roofline: list[RooflinePoint]  # one point per host (link-effective BW)
 
     # -- traffic -------------------------------------------------------------
 
@@ -122,6 +127,20 @@ class ClusterReport:
     @property
     def launches(self) -> int:
         return len(self.records)
+
+    @property
+    def deadline_misses(self) -> int:
+        """Deadline-carrying launches that retired late, cluster-wide."""
+        return sum(1 for r in self.records if r.missed_deadline)
+
+    def links(self) -> dict[str, LinkTelemetry]:
+        """Per-host fabric config-port telemetry (busy/occupancy timelines),
+        keyed ``host/port`` so merged cluster views stay unambiguous."""
+        return {
+            f"{host_id}/{name}": tel
+            for host_id, rep in self.hosts.items()
+            for name, tel in rep.links.items()
+        }
 
     # -- tails ---------------------------------------------------------------
 
@@ -186,6 +205,7 @@ def build_report(hosts, *, slo: Mapping[str, float] | None = None) -> ClusterRep
         t: TenantSLO.from_records(t, recs, slo.get(t))
         for t, recs in sorted(by_tenant.items())
     }
+    last_arrival = max([r.arrival for r in records], default=0.0)
     return ClusterReport(
         makespan=makespan,
         hosts=reports,
@@ -193,4 +213,6 @@ def build_report(hosts, *, slo: Mapping[str, float] | None = None) -> ClusterRep
         records=records,
         port_utilization={h.id: h.port_utilization(makespan) for h in hosts},
         roofline=[h.roofline_point(makespan) for h in hosts],
+        port_wait={h.id: h.port_wait_estimate(now=last_arrival) for h in hosts},
+        fabric_roofline=[h.fabric_roofline_point(makespan) for h in hosts],
     )

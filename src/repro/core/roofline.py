@@ -118,6 +118,37 @@ def host_roofline_point(
     )
 
 
+def fabric_roofline_point(
+    name: str,
+    *,
+    total_ops: float,
+    config_bytes: float,
+    host_cycles: float,
+    link_cycles: float,
+    makespan: float,
+    p_peak: float,
+) -> RooflinePoint:
+    """Configuration-roofline placement with the *interconnect* priced in.
+
+    When config writes cross a fabric link (``repro.fabric``) instead of a
+    core-local CSR port, Eq. 4's split becomes: T_calc is the host's
+    instruction time (parameter calculation + descriptor/write issue) and
+    T_set is the cycles the bytes spent on the wire — so ``BW_cfg`` is the
+    *link-effective* configuration bandwidth. "Know your rooflines!" in
+    practice: the transfer term appears as an explicit ceiling, and a slow
+    link drags the knee point right even when the host itself is fast.
+    """
+    bw = effective_config_bandwidth(config_bytes, host_cycles,
+                                    max(link_cycles, 1e-12))
+    return RooflinePoint(
+        name=name,
+        i_oc=total_ops / max(config_bytes, 1e-12),
+        performance=total_ops / makespan if makespan else 0.0,
+        p_peak=p_peak,
+        bw_config=bw,
+    )
+
+
 # --------------------------------------------------------------------------
 # §4.6 worked example: Gemmini output-stationary 64×64×64 matmul
 # --------------------------------------------------------------------------

@@ -1,0 +1,81 @@
+"""repro.fabric — interconnect-aware configuration transport.
+
+The layers below assume config writes land on a core-local CSR port; this
+package puts the *interconnect* into the model — the transport path that
+dominates offload cost in deployed MPSoCs (Colagrande & Benini) and that
+"Know your rooflines!" argues must appear as an explicit roofline ceiling:
+
+* :mod:`~repro.fabric.link` — typed links (core-local CSR, NoC hop, PCIe)
+  with latency/bandwidth/per-write vs. burst-DMA cost models, and
+  :class:`LinkPort` contention queues so concurrent tenants share wire
+  bandwidth.
+* :mod:`~repro.fabric.transport` — turns a cache write-plan into a
+  transfer schedule: per-register MMIO vs. one coalesced burst descriptor,
+  whichever yields the smaller T_set (Eq. 4).
+* :mod:`~repro.fabric.snapshot` — CRC-guarded, serializable register-context
+  snapshots: capture from a ``ConfigStateCache``, ship across a link,
+  install at the destination — the migration hand-off primitive.
+* :mod:`~repro.fabric.migrate` — the migration planner (warm hand-off vs.
+  cold resend, executed over a shared contended link) and
+  :class:`ContextStore`, which persists contexts through
+  ``checkpoint.CheckpointStore`` so recurring tenants restore warm across
+  runs.
+
+``sched.Scheduler`` prices every config write through this layer (a
+``link="csr"`` fabric reproduces the pre-fabric numbers bit-exactly), and
+``cluster.Host`` exposes the link as its config port.
+"""
+
+from . import link, migrate, snapshot, transport
+from .link import LINKS, LinkModel, LinkPort, Transfer, csr_local, noc, pcie, resolve_link
+from .migrate import (
+    ContextStore,
+    MigrationEstimate,
+    MigrationPlanner,
+    MigrationRecord,
+    capture_contexts,
+    context_device,
+    install_contexts,
+)
+from .snapshot import ContextSnapshot, capture, delta_fields, install, ship_cycles
+from .transport import (
+    TransferSchedule,
+    burst_schedule,
+    crossover_fields,
+    mmio_schedule,
+    plan_fields,
+    plan_transfer,
+)
+
+__all__ = [
+    "LINKS",
+    "ContextSnapshot",
+    "ContextStore",
+    "LinkModel",
+    "LinkPort",
+    "MigrationEstimate",
+    "MigrationPlanner",
+    "MigrationRecord",
+    "Transfer",
+    "TransferSchedule",
+    "burst_schedule",
+    "capture",
+    "capture_contexts",
+    "context_device",
+    "crossover_fields",
+    "csr_local",
+    "delta_fields",
+    "install",
+    "install_contexts",
+    "link",
+    "migrate",
+    "mmio_schedule",
+    "noc",
+    "pcie",
+    "plan_fields",
+    "plan_transfer",
+    "resolve_link",
+    "ship_cycles",
+    "snapshot",
+    "transport",
+]

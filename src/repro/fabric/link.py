@@ -1,0 +1,174 @@
+"""Typed interconnect links for configuration transport.
+
+The paper's host model (and PR 1/2's scheduler above it) assumes config
+writes land on a *core-local* CSR port: the only cost is host instruction
+time. In deployed systems the write crosses an interconnect — a NoC hop to
+a far cluster, or a PCIe transaction to a discrete card — whose latency and
+bandwidth must show up in ``T_set`` (Eq. 4) and therefore as a ceiling on
+the configuration roofline ("Know your rooflines!": transfer terms belong
+on the plot, not in a footnote). Colagrande & Benini measure exactly this:
+offload cost on a many-cluster MPSoC is dominated by the transport path,
+not the accelerator.
+
+Three link classes span the design space:
+
+* :func:`csr_local` — the paper's baseline. Zero latency, infinite
+  bandwidth: configuration cost is pure host instruction time, so every
+  existing single-host result is reproduced bit-exactly.
+* :func:`noc` — an on-chip network hop (or several): a handful of cycles
+  of latency per transaction, wide links, a cheap DMA engine.
+* :func:`pcie` — off-chip: hundreds of cycles per non-posted transaction,
+  narrower effective bandwidth, expensive-but-amortizable DMA bursts.
+
+Each link prices the two transport disciplines ``fabric.transport``
+chooses between:
+
+* **MMIO** (:meth:`LinkModel.mmio_cycles`) — one transaction per config
+  write; every write pays the full link latency (writes to device registers
+  are strongly ordered, so they do not pipeline).
+* **Burst DMA** (:meth:`LinkModel.burst_cycles`) — the host programs a
+  descriptor (``burst_setup``) and a DMA engine streams the whole register
+  image at link bandwidth, paying the latency once per ``max_burst`` bytes.
+
+:class:`LinkPort` adds the *contention* dimension: one link instance shared
+by concurrent tenants serializes their transfers FIFO (a transfer occupies
+the wire until it completes), and logs every transfer so
+``sched.telemetry`` can export per-link busy/occupancy timelines.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """One interconnect class on the config-transport path."""
+
+    name: str
+    kind: str  # "csr" | "noc" | "pcie"
+    latency: float  # cycles one transaction spends crossing the link
+    bandwidth: float  # payload bytes per cycle once streaming
+    supports_dma: bool  # is there a DMA engine that can burst descriptors?
+    burst_setup: float = 0.0  # cycles to program one DMA burst descriptor
+    max_burst: int = 4096  # payload bytes one burst descriptor may carry
+    hops: int = 0  # topological distance (0 = core-local)
+
+    def write_cycles(self, nbytes: float) -> float:
+        """One ordered register write of ``nbytes`` crossing the link."""
+        return self.latency + nbytes / self.bandwidth
+
+    def mmio_cycles(self, n_writes: int, nbytes_per_write: float) -> float:
+        """``n_writes`` strongly-ordered register writes — each pays the
+        full latency (device MMIO does not pipeline)."""
+        return n_writes * self.write_cycles(nbytes_per_write)
+
+    def burst_cycles(self, nbytes: float) -> float:
+        """One DMA transfer of ``nbytes``: per-burst descriptor setup and
+        latency, then the payload streams at link bandwidth."""
+        assert self.supports_dma, f"link {self.name!r} has no DMA engine"
+        bursts = max(1, math.ceil(nbytes / self.max_burst))
+        return bursts * (self.burst_setup + self.latency) + nbytes / self.bandwidth
+
+
+def csr_local() -> LinkModel:
+    """Core-local CSR port — the paper's host model. Zero wire cost, so the
+    pre-fabric scheduler numbers are reproduced exactly; no DMA engine (a
+    core writes its own CSRs faster than it could program a descriptor)."""
+    return LinkModel(name="csr", kind="csr", latency=0.0,
+                     bandwidth=float("inf"), supports_dma=False, hops=0)
+
+
+def noc(hops: int = 1) -> LinkModel:
+    """On-chip network: ~12 cycles of router/wire latency per hop, 8 B/cycle
+    links, a lightweight cluster DMA (cf. the Snitch/Occamy iDMA path)."""
+    assert hops >= 1
+    return LinkModel(name=f"noc{hops}" if hops > 1 else "noc", kind="noc",
+                     latency=12.0 * hops, bandwidth=8.0, supports_dma=True,
+                     burst_setup=24.0, max_burst=1024, hops=hops)
+
+
+def pcie() -> LinkModel:
+    """Off-chip PCIe: non-posted writes cost hundreds of cycles round-trip;
+    DMA descriptors are expensive to build but carry 4 KiB bursts."""
+    return LinkModel(name="pcie", kind="pcie", latency=350.0, bandwidth=4.0,
+                     supports_dma=True, burst_setup=96.0, max_burst=4096,
+                     hops=1)
+
+
+LINKS: dict[str, LinkModel] = {
+    "csr": csr_local(),
+    "noc": noc(),
+    "noc2": noc(2),
+    "pcie": pcie(),
+}
+
+
+def resolve_link(spec: "LinkModel | str | None") -> LinkModel:
+    """``None`` → the paper's core-local baseline; a string → ``LINKS``."""
+    if spec is None:
+        return LINKS["csr"]
+    if isinstance(spec, LinkModel):
+        return spec
+    assert spec in LINKS, f"unknown link {spec!r} (have {sorted(LINKS)})"
+    return LINKS[spec]
+
+
+# -- contention --------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Transfer:
+    """One completed occupancy of a link."""
+
+    start: float
+    end: float
+    nbytes: int
+    tag: str  # tenant / purpose
+    mode: str  # "mmio" | "burst"
+
+    @property
+    def cycles(self) -> float:
+        return self.end - self.start
+
+
+class LinkPort:
+    """One shared link instance: concurrent tenants' transfers serialize
+    FIFO on the wire, and every occupancy is logged for telemetry."""
+
+    def __init__(self, link: LinkModel, name: str = "link"):
+        self.link = link
+        self.name = name
+        self.busy_until = 0.0
+        self.log: list[Transfer] = []
+
+    def backlog(self, now: float) -> float:
+        """Cycles the wire is already committed beyond ``now``."""
+        return max(0.0, self.busy_until - now)
+
+    def acquire(self, now: float, cycles: float, *, nbytes: int = 0,
+                tag: str = "", mode: str = "mmio") -> Transfer:
+        """Occupy the link for ``cycles`` starting no earlier than ``now``
+        (a busy wire pushes the transfer back — bandwidth sharing as FIFO
+        serialization). Returns the resolved transfer."""
+        start = max(now, self.busy_until)
+        xfer = Transfer(start=start, end=start + cycles, nbytes=int(nbytes),
+                        tag=tag, mode=mode)
+        self.busy_until = xfer.end
+        self.log.append(xfer)
+        return xfer
+
+    # -- observables ---------------------------------------------------------
+
+    @property
+    def busy_cycles(self) -> float:
+        return sum(t.cycles for t in self.log)
+
+    @property
+    def bytes_moved(self) -> int:
+        return sum(t.nbytes for t in self.log)
+
+    def occupancy(self, makespan: float) -> float:
+        """Fraction of the run the wire was busy."""
+        return self.busy_cycles / makespan if makespan else 0.0

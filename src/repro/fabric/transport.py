@@ -1,0 +1,120 @@
+"""Config-write transport: turn a cache write-plan into a transfer schedule.
+
+``sched.ConfigStateCache`` decides *what* must cross the host→device
+boundary (the delta of a launch's register file); this module decides
+*how*. Two disciplines compete, priced against one :class:`~.link.LinkModel`:
+
+* **MMIO** — the host issues one register write per config-write
+  instruction, exactly the paper's §2 model: host cycles are
+  ``(writes · instrs_per_write + launch_instrs) · host_cpi`` (parameter
+  calculation and instruction issue, the T_calc of Eq. 4) and every write
+  pays the link's full transaction latency.
+* **Burst DMA** — the host packs the register values into a descriptor in
+  local memory (~1 store per field, so host cycles shrink to
+  ``(n_fields + launch_instrs) · host_cpi``) and a DMA engine streams the
+  image in bursts, paying link latency once per burst instead of per write.
+
+:func:`plan_fields` picks whichever yields the smaller ``T_set``
+(host + wire) and reports both, so benchmarks can show the crossover: on a
+zero-latency core-local CSR port MMIO always wins (and reproduces the
+pre-fabric cost bit-exactly); once writes cross a NoC or PCIe, burst DMA
+wins as soon as the plan exceeds a few registers.
+
+The launch command itself also crosses the link (one field-sized write,
+matching the existing byte accounting in ``sched.scheduler``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.accelerators import AcceleratorModel
+from .link import LinkModel
+
+MODES = ("mmio", "burst")
+
+
+@dataclass(frozen=True)
+class TransferSchedule:
+    """One launch's configuration transfer, fully priced."""
+
+    mode: str  # "mmio" | "burst"
+    link: str  # LinkModel.name
+    n_fields: int  # register fields crossing the boundary (launch excluded)
+    nbytes: int  # config payload on the wire, launch write included
+    host_cycles: float  # host instruction time (T_calc + issue)
+    link_cycles: float  # time on the wire
+
+    @property
+    def t_set(self) -> float:
+        """Eq. 4's configuration term for this launch: the host is captive
+        for its instruction time and (conservatively) the wire time."""
+        return self.host_cycles + self.link_cycles
+
+
+def mmio_schedule(n_fields: int, model: AcceleratorModel,
+                  link: LinkModel) -> TransferSchedule:
+    """Per-register MMIO: the paper's write discipline over the link."""
+    writes = -(-n_fields // model.fields_per_write) if n_fields else 0
+    host = (writes * model.instrs_per_write + model.launch_instrs) * model.host_cpi
+    payload = model.fields_per_write * model.bytes_per_field
+    wire = (link.mmio_cycles(writes, payload)
+            + link.write_cycles(model.bytes_per_field))  # the launch write
+    return TransferSchedule(
+        mode="mmio",
+        link=link.name,
+        n_fields=n_fields,
+        nbytes=(n_fields + 1) * model.bytes_per_field,
+        host_cycles=host,
+        link_cycles=wire,
+    )
+
+
+def burst_schedule(n_fields: int, model: AcceleratorModel,
+                   link: LinkModel) -> TransferSchedule | None:
+    """Coalesced burst descriptor, or ``None`` when the link has no DMA
+    engine. The host touches each field once (a local store into the
+    descriptor), then the wire streams the whole image."""
+    if not link.supports_dma:
+        return None
+    host = (n_fields + model.launch_instrs) * model.host_cpi
+    nbytes = (n_fields + 1) * model.bytes_per_field
+    return TransferSchedule(
+        mode="burst",
+        link=link.name,
+        n_fields=n_fields,
+        nbytes=nbytes,
+        host_cycles=host,
+        link_cycles=link.burst_cycles(nbytes),
+    )
+
+
+def plan_fields(n_fields: int, model: AcceleratorModel,
+                link: LinkModel) -> TransferSchedule:
+    """The cheaper of MMIO and burst DMA for an ``n_fields``-register plan
+    (ties go to MMIO — no descriptor to build)."""
+    mmio = mmio_schedule(n_fields, model, link)
+    burst = burst_schedule(n_fields, model, link)
+    if burst is not None and burst.t_set < mmio.t_set:
+        return burst
+    return mmio
+
+
+def plan_transfer(plan, model: AcceleratorModel,
+                  link: LinkModel) -> TransferSchedule:
+    """Price a ``sched.state_cache.WritePlan``'s sent set (duck-typed so
+    the fabric layer stays import-free of ``repro.sched``)."""
+    return plan_fields(len(plan.sent), model, link)
+
+
+def crossover_fields(model: AcceleratorModel, link: LinkModel,
+                     limit: int = 1024) -> int | None:
+    """Smallest plan size at which burst DMA beats per-register MMIO on
+    this (device, link) pair — ``None`` if MMIO wins up to ``limit``
+    (always the case on a core-local CSR port)."""
+    if not link.supports_dma:
+        return None
+    for n in range(1, limit + 1):
+        if burst_schedule(n, model, link).t_set < mmio_schedule(n, model, link).t_set:
+            return n
+    return None

@@ -25,12 +25,26 @@ configuration across the whole accelerator pool.
 """
 
 from . import queue, scheduler, state_cache, telemetry
-from .queue import LaunchQueue, LaunchTiming, Staged
+from .queue import (
+    AdmissionQueue,
+    LaunchQueue,
+    LaunchTiming,
+    Staged,
+    arrival_order,
+    edf_order,
+)
 from .scheduler import Device, LaunchRequest, Scheduler, requests_from_trace
 from .state_cache import CacheStats, ConfigStateCache, WritePlan, nbytes_of
-from .telemetry import DeviceTelemetry, LaunchRecord, SchedulerReport
+from .telemetry import (
+    DeviceTelemetry,
+    LaunchRecord,
+    LinkTelemetry,
+    SchedulerReport,
+    geomean,
+)
 
 __all__ = [
+    "AdmissionQueue",
     "CacheStats",
     "ConfigStateCache",
     "Device",
@@ -39,10 +53,14 @@ __all__ = [
     "LaunchRecord",
     "LaunchRequest",
     "LaunchTiming",
+    "LinkTelemetry",
     "Scheduler",
     "SchedulerReport",
     "Staged",
     "WritePlan",
+    "arrival_order",
+    "edf_order",
+    "geomean",
     "nbytes_of",
     "queue",
     "requests_from_trace",

@@ -1,4 +1,13 @@
-"""Depth-k staged launch queues — per-device dispatch timing.
+"""Launch queues: admission ordering and depth-k staged dispatch timing.
+
+**Admission** (:class:`AdmissionQueue`): the order in which an open-loop
+drain hands arrived requests to the scheduler — plain arrival order (ties
+to higher priority), or earliest-deadline-first over whatever has already
+arrived. EDF only reorders the *backlog*: with no backlog (or no deadlines
+set) it degrades to the priority-class order, so best-effort traffic is
+unaffected.
+
+**Staging** (:class:`LaunchQueue`): per-device dispatch timing.
 
 Models the two configuration disciplines the paper characterizes, per
 device, against a single host clock owned by the scheduler:
@@ -27,11 +36,70 @@ placement lives in the scheduler.
 
 from __future__ import annotations
 
+import heapq
+import itertools
 from collections import deque
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Iterable
 
 from ..core.accelerators import AcceleratorModel
+
+ADMISSION_MODES = ("arrival", "edf")
+
+
+def arrival_order(req) -> tuple[float, int, str]:
+    """Admission sort key for open-loop drains — arrival time, ties to
+    higher priority, then tenant for determinism. Shared by
+    :meth:`Scheduler.run_open_loop` and ``cluster.Cluster.run`` so
+    single-host and cluster runs admit identical traces identically."""
+    return (req.arrival_time, -req.priority, req.tenant)
+
+
+def edf_order(req) -> tuple[float, int, float, str]:
+    """Earliest-deadline-first key over *arrived* requests. Requests
+    without a deadline sort last (deadline = +inf), falling back to the
+    priority-class order — a stream with no deadlines set behaves exactly
+    like the priority scheduler."""
+    deadline = getattr(req, "deadline", None)
+    return (deadline if deadline is not None else float("inf"),
+            -req.priority, req.arrival_time, req.tenant)
+
+
+class AdmissionQueue:
+    """Open-loop admission buffer: hands the scheduler its next request.
+
+    ``mode="arrival"`` reproduces the classic drain (arrival order, ties to
+    higher priority). ``mode="edf"`` admits everything that has arrived by
+    the host clock and pops the earliest deadline among it — under a
+    backlog (e.g. a burst episode), tight-deadline requests overtake loose
+    ones they arrived behind."""
+
+    def __init__(self, requests: Iterable, mode: str = "arrival"):
+        assert mode in ADMISSION_MODES, mode
+        self.mode = mode
+        self._future = deque(sorted(requests, key=arrival_order))
+        self._ready: list[tuple] = []  # heap of (edf key, seq, request)
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._future) + len(self._ready)
+
+    def _admit_until(self, t: float) -> None:
+        while self._future and self._future[0].arrival_time <= t:
+            req = self._future.popleft()
+            heapq.heappush(self._ready, (edf_order(req), next(self._seq), req))
+
+    def pop(self, now: float):
+        """The next request to dispatch given host clock ``now``."""
+        assert len(self), "pop from an empty admission queue"
+        if self.mode == "arrival":
+            return self._future.popleft()
+        self._admit_until(now)
+        if not self._ready:
+            # the host is idle ahead of traffic: jump to the next arrival
+            # instant and let everything landing there compete on deadline
+            self._admit_until(self._future[0].arrival_time)
+        return heapq.heappop(self._ready)[-1]
 
 
 @dataclass(frozen=True)

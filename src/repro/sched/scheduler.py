@@ -33,19 +33,13 @@ from typing import Iterable, Sequence
 
 from ..core.accelerators import REGISTRY, AcceleratorModel
 from ..core.interp import Trace
-from .queue import LaunchQueue
+from ..fabric.link import LinkModel, LinkPort, resolve_link
+from ..fabric.transport import plan_fields
+from .queue import AdmissionQueue, LaunchQueue, arrival_order
 from .state_cache import ConfigStateCache, WritePlan
-from .telemetry import DeviceTelemetry, SchedulerReport
+from .telemetry import DeviceTelemetry, LinkTelemetry, SchedulerReport
 
 POLICIES = ("affinity", "round_robin", "least_loaded")
-
-
-def arrival_order(req: "LaunchRequest") -> tuple[float, int, str]:
-    """Admission sort key for open-loop drains — arrival time, ties to
-    higher priority, then tenant for determinism. Shared by
-    :meth:`Scheduler.run_open_loop` and ``cluster.Cluster.run`` so
-    single-host and cluster runs admit identical traces identically."""
-    return (req.arrival_time, -req.priority, req.tenant)
 
 
 @dataclass(frozen=True)
@@ -58,7 +52,10 @@ class LaunchRequest:
     issue it earlier, and queueing delay is measured from it
     (``cluster.traffic`` stamps arrivals from Poisson/bursty/diurnal
     processes). ``priority`` orders same-instant admissions and lets a
-    request preempt lower-priority *staged* launches (``sched.queue``)."""
+    request preempt lower-priority *staged* launches (``sched.queue``).
+    ``deadline`` (absolute, host cycles) opts the request into EDF
+    admission (``run_open_loop(order="edf")``); ``None`` means best
+    effort."""
 
     tenant: str
     dims: tuple[int, int, int]  # logical (M, K, N); ops = 2·M·K·N
@@ -66,6 +63,7 @@ class LaunchRequest:
     accel: str | None = None
     arrival_time: float = 0.0
     priority: int = 0
+    deadline: float | None = None
 
     def regs_for(self, model: AcceleratorModel) -> dict[str, int]:
         """Materialize the register file for a device kind — logical dims
@@ -91,7 +89,9 @@ class Device:
 
     def config_cycles(self, n_fields: int) -> float:
         """Host cycles to write ``n_fields`` registers + issue the launch
-        (same accounting as ``interp._exec_setup`` / ``_exec_launch``)."""
+        (same accounting as ``interp._exec_setup`` / ``_exec_launch``) —
+        the core-local CSR special case of ``fabric.transport.plan_fields``
+        (zero wire cost, MMIO always wins)."""
         m = self.model
         writes = -(-n_fields // m.fields_per_write) if n_fields else 0
         return (writes * m.instrs_per_write + m.launch_instrs) * m.host_cpi
@@ -108,6 +108,7 @@ class Scheduler:
         max_contexts: int = 4,
         policy: str = "affinity",
         cache_enabled: bool = True,
+        link: LinkModel | str | None = None,
     ):
         assert policy in POLICIES, policy
         if pool is None:
@@ -118,6 +119,13 @@ class Scheduler:
         ]
         self.policy = policy
         self.cache_enabled = cache_enabled
+        # the interconnect config writes cross: ``None``/"csr" is the
+        # paper's core-local port (zero wire cost — the pre-fabric numbers
+        # reproduce bit-exactly); "noc"/"pcie" price every write's T_set
+        # through fabric.transport (MMIO vs. burst DMA, whichever is
+        # cheaper) and log occupancy on the shared config LinkPort
+        self.link = resolve_link(link)
+        self.port = LinkPort(self.link, name=f"cfg[{self.link.name}]")
         self.host = 0.0
         self._rr = itertools.count()
         self._placements: dict[str, dict[str, int]] = {}
@@ -149,7 +157,7 @@ class Scheduler:
             n_sent, elided = len(plan.sent), plan.bytes_elided
         else:
             n_sent, elided = len(regs), 0
-        cfg_c = dev.config_cycles(n_sent)
+        cfg_c = plan_fields(n_sent, dev.model, self.link).t_set
         issue = self.host + cfg_c
         if dev.model.concurrent:
             return cfg_c + dev.queue.admission_delay(issue), elided
@@ -225,7 +233,13 @@ class Scheduler:
             plan = WritePlan(sent=dict(regs), elided={}, bytes_sent=total,
                              bytes_elided=0, context_hit=False)
         issue = self.host
-        cfg_c = dev.config_cycles(len(plan.sent))
+        xfer = plan_fields(len(plan.sent), dev.model, self.link)
+        cfg_c = xfer.t_set
+        # the wire occupancy follows the host's descriptor/write issue;
+        # the serialized host clock means config transfers never overlap,
+        # but the port log still captures per-link busy/occupancy
+        self.port.acquire(issue + xfer.host_cycles, xfer.link_cycles,
+                          nbytes=xfer.nbytes, tag=req.tenant, mode=xfer.mode)
         self.host += cfg_c
         timing = dev.queue.submit(self.host, dev.model.macro_cycles(regs),
                                   priority=req.priority, token=req)
@@ -244,6 +258,7 @@ class Scheduler:
             arrival=req.arrival_time,
             issue=issue,
             priority=req.priority,
+            deadline=req.deadline,
         )
         self._placements.setdefault(req.tenant, {})
         self._placements[req.tenant][dev.id] = (
@@ -267,13 +282,20 @@ class Scheduler:
             self.dispatch(req)
         return self.finish()
 
-    def run_open_loop(self, requests: Iterable[LaunchRequest]) -> SchedulerReport:
+    def run_open_loop(self, requests: Iterable[LaunchRequest],
+                      *, order: str = "arrival") -> SchedulerReport:
         """Event-driven drain: requests are admitted in arrival order (ties
         go to higher priority), and the host clock idles forward whenever
         the next arrival is still in the future — queueing delay percentiles
-        out of ``report.launch_log()`` are meaningful only under this loop."""
-        for req in sorted(requests, key=arrival_order):
-            self.dispatch(req)
+        out of ``report.launch_log()`` are meaningful only under this loop.
+
+        ``order="edf"`` re-orders the *backlog* earliest-deadline-first
+        (requests without deadlines fall back to priority order): under
+        bursts, tight-deadline launches overtake loose ones they arrived
+        behind, lowering deadline misses at equal work."""
+        queue = AdmissionQueue(requests, mode=order)
+        while len(queue):
+            self.dispatch(queue.pop(self.host))
         return self.finish()
 
     def finish(self) -> SchedulerReport:
@@ -283,6 +305,7 @@ class Scheduler:
             devices={d.id: d.telemetry for d in self.devices},
             cache_stats={d.id: d.cache.stats for d in self.devices},
             placements={t: dict(p) for t, p in self._placements.items()},
+            links={self.port.name: LinkTelemetry.from_port(self.port, makespan)},
         )
 
 

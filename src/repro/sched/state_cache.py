@@ -110,6 +110,10 @@ class ConfigStateCache:
     def context(self, tenant: Any) -> dict[str, Any] | None:
         return self._contexts.get(tenant)
 
+    def tenants(self) -> list[Any]:
+        """Resident tenants, LRU-oldest first."""
+        return list(self._contexts)
+
     def plan(self, tenant: Any, fields: Mapping[str, Any]) -> WritePlan:
         """Split ``fields`` into sent/elided against the tenant's context
         without touching cache state (used for affinity scoring)."""
@@ -154,6 +158,24 @@ class ConfigStateCache:
         self.stats.fields_sent += len(plan.sent)
         self.stats.fields_elided += len(plan.elided)
         return plan
+
+    # -- migration / restore -------------------------------------------------
+
+    def install_context(self, tenant: Any, fields: Mapping[str, Any]) -> None:
+        """Adopt a register context captured elsewhere (a migration
+        hand-off or a checkpoint restore, ``fabric.snapshot``): the
+        tenant's next dispatch here is a context hit and pays only its
+        delta. Counts neither hit nor miss — no dispatch happened — but
+        evictions it forces are recorded, and LRU order treats the install
+        as a use."""
+        if tenant in self._contexts:
+            self._contexts.move_to_end(tenant)
+        else:
+            while len(self._contexts) >= self.max_contexts:
+                self._contexts.popitem(last=False)
+                self.stats.evictions += 1
+            self._contexts[tenant] = {}
+        self._contexts[tenant].update(fields)
 
     # -- invalidation --------------------------------------------------------
 

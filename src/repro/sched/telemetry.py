@@ -18,6 +18,19 @@ from ..core.roofline import RooflinePoint
 from .state_cache import CacheStats, elision_ratio
 
 
+def geomean(values) -> float:
+    """Geometric mean; 0.0 for an empty sequence or any non-positive term —
+    a collapsed cell must drag the summary to zero, not vanish from it.
+    The one definition every ``BENCH_*.json`` summary shares."""
+    vals = list(values)
+    if not vals or any(v <= 0.0 for v in vals):
+        return 0.0
+    prod = 1.0
+    for v in vals:
+        prod *= v
+    return prod ** (1.0 / len(vals))
+
+
 @dataclass(frozen=True)
 class LaunchRecord:
     """One launch's end-to-end life: arrival → issue → start → retire.
@@ -36,6 +49,7 @@ class LaunchRecord:
     config_cycles: float
     bytes_sent: int
     priority: int = 0
+    deadline: float | None = None  # absolute EDF deadline (None = best effort)
 
     @property
     def queue_delay(self) -> float:
@@ -47,6 +61,12 @@ class LaunchRecord:
     def latency(self) -> float:
         """Arrival to retirement — what a tenant's SLO is written against."""
         return self.end - self.arrival
+
+    @property
+    def missed_deadline(self) -> bool:
+        """Deadline-carrying launches that retired late (best-effort
+        launches never miss)."""
+        return self.deadline is not None and self.end > self.deadline
 
 
 @dataclass
@@ -81,6 +101,7 @@ class DeviceTelemetry:
         arrival: float = 0.0,
         issue: float | None = None,
         priority: int = 0,
+        deadline: float | None = None,
     ) -> None:
         self.invocations.append(Invocation(self.device, dict(regs), start, end))
         self.launch_log.append(LaunchRecord(
@@ -94,6 +115,7 @@ class DeviceTelemetry:
             config_cycles=config_cycles,
             bytes_sent=bytes_sent,
             priority=priority,
+            deadline=deadline,
         ))
         self.busy_cycles += end - start
         self.total_ops += ops
@@ -158,6 +180,52 @@ class DeviceTelemetry:
         )
 
 
+@dataclass(frozen=True)
+class LinkTelemetry:
+    """Everything observed about one fabric link during a run: busy cycles,
+    bytes moved, occupancy, and the per-transfer timeline (the link-level
+    analogue of a device gantt). Built from a ``fabric.link.LinkPort``'s
+    transfer log (duck-typed, so this layer stays fabric-import-free)."""
+
+    link: str  # port name, e.g. "cfg[noc]"
+    kind: str  # link class: "csr" | "noc" | "pcie"
+    transfers: int
+    nbytes: int
+    busy_cycles: float
+    makespan: float
+    log: tuple = ()  # (start, end, nbytes, tag, mode) per transfer
+
+    @classmethod
+    def from_port(cls, port, makespan: float) -> "LinkTelemetry":
+        return cls(
+            link=port.name,
+            kind=port.link.kind,
+            transfers=len(port.log),
+            nbytes=port.bytes_moved,
+            busy_cycles=port.busy_cycles,
+            makespan=makespan,
+            log=tuple((t.start, t.end, t.nbytes, t.tag, t.mode)
+                      for t in port.log),
+        )
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of the run the wire was busy — the link-saturation
+        observable (→1.0 means the interconnect, not any host or device,
+        is the configuration bottleneck)."""
+        return self.busy_cycles / self.makespan if self.makespan else 0.0
+
+    @property
+    def effective_bandwidth(self) -> float:
+        """Bytes per busy cycle actually sustained on the wire."""
+        return self.nbytes / self.busy_cycles if self.busy_cycles else 0.0
+
+    def timeline(self) -> list[tuple[float, float, str]]:
+        """(start, end, tag) busy intervals, transfer order — renderable
+        beside device gantts on the same time axis."""
+        return [(start, end, tag) for start, end, _, tag, _ in self.log]
+
+
 @dataclass
 class SchedulerReport:
     """Aggregate of one scheduler run."""
@@ -166,6 +234,7 @@ class SchedulerReport:
     devices: dict[str, DeviceTelemetry]
     cache_stats: dict[str, CacheStats]
     placements: dict[str, dict[str, int]]  # tenant -> {device: launches}
+    links: dict[str, LinkTelemetry] = field(default_factory=dict)
 
     @property
     def bytes_sent(self) -> int:
@@ -199,6 +268,15 @@ class SchedulerReport:
             out.setdefault(rec.tenant, []).append(rec.queue_delay)
         return out
 
+    def deadline_misses(self) -> int:
+        """Launches that carried a deadline and retired after it (EDF's
+        objective; best-effort launches never count)."""
+        return sum(1 for r in self.launch_log() if r.missed_deadline)
+
+    def deadline_launches(self) -> int:
+        """Launches that carried a deadline at all."""
+        return sum(1 for r in self.launch_log() if r.deadline is not None)
+
     @property
     def elision_ratio(self) -> float:
         return elision_ratio(self.bytes_sent, self.bytes_elided)
@@ -219,10 +297,4 @@ class SchedulerReport:
         return {name: d.utilization(self.makespan) for name, d in self.devices.items()}
 
     def geomean_utilization(self) -> float:
-        utils = [u for u in self.utilizations().values()]
-        if not utils or any(u <= 0.0 for u in utils):
-            return 0.0
-        prod = 1.0
-        for u in utils:
-            prod *= u
-        return prod ** (1.0 / len(utils))
+        return geomean(self.utilizations().values())

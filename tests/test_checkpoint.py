@@ -1,0 +1,73 @@
+"""checkpoint.store: the restore paths test_substrate leaves uncovered —
+reshard-on-restore placement, CRC rejection on the restore (not just save)
+side, and manifest key listing (the template-free restore path
+``fabric.ContextStore`` relies on)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "opt": {"m": jnp.ones((5,), jnp.bfloat16)},
+    }
+
+
+def test_restore_with_resharding_places_on_the_target_sharding(tmp_path):
+    """Elastic restarts: arrays come back placed onto whatever sharding the
+    *current* topology dictates, not wherever they were saved."""
+    store = CheckpointStore(str(tmp_path))
+    tree = _tree()
+    store.save(3, tree)
+
+    target = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = {"w": target, "opt": {"m": target}}
+    out = store.restore(3, tree, shardings=shardings)
+
+    assert out["w"].sharding.is_equivalent_to(target, out["w"].ndim)
+    assert out["opt"]["m"].sharding.is_equivalent_to(target, out["opt"]["m"].ndim)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["opt"]["m"].dtype == jnp.bfloat16
+
+
+def test_partial_shardings_only_place_named_leaves(tmp_path):
+    """Leaves without a target sharding restore as plain host-placed
+    arrays; named leaves get device_put onto theirs — mixed trees work."""
+    store = CheckpointStore(str(tmp_path))
+    tree = _tree()
+    store.save(1, tree)
+    target = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = store.restore(1, tree, shardings={"w": target, "opt": {"m": None}})
+    assert out["w"].sharding.is_equivalent_to(target, out["w"].ndim)
+    np.testing.assert_array_equal(np.asarray(out["opt"]["m"]),
+                                  np.asarray(tree["opt"]["m"]))
+
+
+def test_restore_rejects_corrupted_leaf_with_crc(tmp_path):
+    """Flipping bytes in any one array file must fail the whole restore
+    loudly — never hand back a silently-wrong tree."""
+    store = CheckpointStore(str(tmp_path))
+    tree = _tree()
+    store.save(7, tree)
+    step_dir = os.path.join(str(tmp_path), "step_7")
+    victim = sorted(f for f in os.listdir(step_dir) if f.endswith(".npy"))[0]
+    with open(os.path.join(step_dir, victim), "r+b") as f:
+        f.seek(-1, 2)
+        f.write(b"\xff")
+    with pytest.raises(IOError, match="CRC mismatch"):
+        store.restore(7, tree)
+    # the manifest itself is untouched: keys still enumerate
+    assert store.keys(7) == ["opt/m", "w"]
+
+
+def test_keys_lists_manifest_leaves(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(2, {"b": jnp.zeros((2,)), "a": {"x": jnp.ones((1,))}})
+    assert store.keys(2) == ["a/x", "b"]

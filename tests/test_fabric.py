@@ -1,0 +1,366 @@
+"""repro.fabric: link cost models and contention, MMIO-vs-burst transport
+choice (with bit-exact CSR backward compatibility), snapshot round-trips and
+corruption rejection, warm-vs-cold migration pricing and execution, cross-run
+context persistence, and the scheduler/cluster integration."""
+
+import pytest
+
+from repro.core.accelerators import REGISTRY
+from repro.core.roofline import fabric_roofline_point
+from repro.cluster import Cluster, Host
+from repro.fabric import (
+    LINKS,
+    ContextSnapshot,
+    ContextStore,
+    LinkPort,
+    MigrationPlanner,
+    burst_schedule,
+    capture,
+    capture_contexts,
+    crossover_fields,
+    csr_local,
+    delta_fields,
+    install,
+    install_contexts,
+    mmio_schedule,
+    noc,
+    pcie,
+    plan_fields,
+    resolve_link,
+    ship_cycles,
+)
+from repro.sched import ConfigStateCache, LaunchRequest, Scheduler
+
+GEM = REGISTRY["gemmini"]
+OG = REGISTRY["opengemm"]
+TILE = (8, 16, 16)
+
+
+def _big_ctx_request(tenant, n_static=32, ptr=0x1000, accel="gemmini"):
+    """A launch with a large register file: many static fields (scales,
+    zero-points...) plus one advancing pointer — the big-context regime."""
+    extra = {f"w{i}": 7 * i for i in range(n_static)}
+    extra["A"] = ptr
+    return LaunchRequest(tenant, TILE, extra, accel=accel)
+
+
+# ----------------------------------------------------------------- links
+
+
+def test_csr_link_has_zero_wire_cost():
+    csr = LINKS["csr"]
+    assert csr.write_cycles(16) == 0.0
+    assert csr.mmio_cycles(100, 16) == 0.0
+    assert not csr.supports_dma
+
+
+def test_link_registry_and_resolve():
+    assert resolve_link(None).kind == "csr"
+    assert resolve_link("pcie") is LINKS["pcie"]
+    assert resolve_link(noc(3)).hops == 3
+    with pytest.raises(AssertionError):
+        resolve_link("infiniband")
+
+
+def test_noc_hops_scale_latency():
+    assert noc(2).latency == 2 * noc(1).latency
+    assert LINKS["noc2"].write_cycles(8) > LINKS["noc"].write_cycles(8)
+
+
+def test_burst_amortizes_latency_over_bytes():
+    """Per-byte cost falls with transfer size (latency+setup amortize),
+    until max_burst forces another descriptor."""
+    link = pcie()
+    small = link.burst_cycles(64) / 64
+    big = link.burst_cycles(4096) / 4096
+    assert big < small
+    # crossing max_burst adds one more setup+latency
+    assert link.burst_cycles(link.max_burst + 1) > link.burst_cycles(link.max_burst)
+
+
+def test_link_port_serializes_concurrent_transfers():
+    port = LinkPort(noc(), name="shared")
+    a = port.acquire(0.0, 100.0, nbytes=256, tag="t0")
+    b = port.acquire(10.0, 50.0, nbytes=128, tag="t1")  # wire still busy
+    assert a.end == 100.0
+    assert b.start == 100.0 and b.end == 150.0  # pushed back, not overlapped
+    assert port.backlog(120.0) == 30.0
+    assert port.busy_cycles == 150.0 and port.bytes_moved == 384
+
+
+# ------------------------------------------------------------- transport
+
+
+def test_csr_transport_is_bitexact_with_legacy_config_cycles():
+    """Over a core-local CSR port the fabric reproduces the pre-fabric
+    scheduler cost exactly — per device kind, for every plan size."""
+    csr = csr_local()
+    for model in (GEM, OG):
+        dev = Scheduler({"d": model}).devices[0]
+        for n in range(0, 40):
+            sched = plan_fields(n, model, csr)
+            assert sched.mode == "mmio"
+            assert sched.link_cycles == 0.0
+            assert sched.t_set == dev.config_cycles(n)
+
+
+def test_burst_beats_mmio_beyond_a_few_registers():
+    """The ISSUE's transport acceptance: once a WritePlan exceeds a few
+    registers, one coalesced DMA burst undercuts per-register MMIO on
+    every fabric link class."""
+    for link_name in ("noc", "pcie"):
+        link = LINKS[link_name]
+        for model in (GEM, OG):
+            x = crossover_fields(model, link)
+            assert x is not None and x <= 8, (link_name, model.name, x)
+            n = max(x, 4)
+            assert burst_schedule(n, model, link).t_set < mmio_schedule(n, model, link).t_set
+            assert plan_fields(n, model, link).mode == "burst"
+    # and never on the core-local port (no DMA engine to win with)
+    assert crossover_fields(GEM, LINKS["csr"]) is None
+
+
+def test_transport_prices_the_launch_write():
+    """An empty plan still crosses the link once — the launch command."""
+    sched = plan_fields(0, OG, LINKS["noc"])
+    assert sched.n_fields == 0
+    assert sched.nbytes == OG.bytes_per_field
+    assert sched.link_cycles > 0.0
+
+
+# -------------------------------------------------------------- snapshot
+
+
+def test_snapshot_capture_install_roundtrip():
+    src = ConfigStateCache()
+    src.dispatch("t0", {"M": 8, "K": 16, "N": 16, "A": 0x1000})
+    snap = capture(src, "t0", GEM)
+    assert snap.n_fields == 4
+    assert snap.context_bytes == 4 * GEM.bytes_per_field
+
+    dst = ConfigStateCache()
+    install(dst, snap)
+    # next dispatch at the destination is a context hit, delta only
+    plan = dst.dispatch("t0", {"M": 8, "K": 16, "N": 16, "A": 0x1040})
+    assert plan.context_hit
+    assert set(plan.sent) == {"A"}
+    assert dst.stats.misses == 0
+
+
+def test_snapshot_wire_format_roundtrip_and_crc_rejection():
+    snap = ContextSnapshot("t0", "gemmini", 8, {"M": 8, "A": 0x1000})
+    raw = snap.to_bytes()
+    assert ContextSnapshot.from_bytes(raw) == snap
+    corrupted = raw[:-3] + b"\x00!!"
+    with pytest.raises(ValueError, match="CRC"):
+        ContextSnapshot.from_bytes(corrupted)
+    with pytest.raises(ValueError, match="magic"):
+        ContextSnapshot.from_bytes(b"NOPE" + raw[4:])
+
+
+def test_capture_of_cold_tenant_is_none_and_delta_fields():
+    cache = ConfigStateCache()
+    assert capture(cache, "ghost", GEM) is None
+    snap = ContextSnapshot("t0", "gemmini", 8, {"M": 8, "A": 0x1000})
+    assert delta_fields(snap, {"M": 8, "A": 0x1040, "B": 1}) == {"A": 0x1040, "B": 1}
+    assert delta_fields(None, {"M": 8}) == {"M": 8}
+
+
+def test_ship_cycles_scales_with_context_and_link():
+    big = ContextSnapshot("t", "gemmini", 8, {f"w{i}": i for i in range(64)})
+    small = ContextSnapshot("t", "gemmini", 8, {"w0": 0})
+    assert ship_cycles(big, LINKS["noc"]) > ship_cycles(small, LINKS["noc"])
+    assert ship_cycles(big, LINKS["pcie"]) > ship_cycles(big, LINKS["noc"])
+
+
+# ------------------------------------------------------------- migration
+
+
+def _warm_host(host_id, tenant, link, n_static=32, launches=3):
+    host = Host.from_registry(host_id, {"gemmini": 1, "opengemm": 1}, link=link)
+    for i in range(launches):
+        host.dispatch(_big_ctx_request(tenant, n_static, ptr=0x1000 + 64 * i))
+    return host
+
+
+def test_warm_handoff_beats_cold_resend_for_big_context_over_noc():
+    src = _warm_host("src", "t0", "noc")
+    dst = Host.from_registry("dst", {"gemmini": 1, "opengemm": 1}, link="noc")
+    probe = _big_ctx_request("t0", ptr=0x2000)
+
+    planner = MigrationPlanner(link="noc")
+    est = planner.estimate("t0", src, dst, probe)
+    assert est.mode == "warm"
+    assert est.warm_cycles < est.cold_cycles
+    assert est.warm_port_bytes < est.cold_port_bytes
+    assert est.context_fields == 36  # 32 static + the pointer + 3 dim registers
+
+    rec = planner.migrate("t0", src, dst, probe, now=100.0)
+    assert rec.transfer is not None and rec.transfer.start >= 100.0
+    # the source context is gone, the destination is warm: the tenant's
+    # next dispatch at dst is a hit sending only the advanced pointer
+    assert all(d.cache.context("t0") is None for d in src.sched.devices)
+    dst.dispatch(probe)
+    gem = dst.sched.devices[0]
+    assert gem.cache.stats.misses == 0 and gem.cache.stats.hits == 1
+    plan = gem.cache.plan("t0", probe.regs_for(gem.model))
+    assert plan.bytes_elided > 0  # context resident after the dispatch
+
+
+def test_tiny_context_migrates_cold():
+    """A one-field context cannot amortize the hand-off's transfer
+    overhead over PCIe: the auto planner must choose a cold resend."""
+    src = Host.from_registry("src", {"gemmini": 1}, link="pcie")
+    src.dispatch(LaunchRequest("t0", TILE, {"A": 1}, accel="gemmini"))
+    dst = Host.from_registry("dst", {"gemmini": 1}, link="pcie")
+    probe = LaunchRequest("t0", TILE, {"A": 2}, accel="gemmini")
+
+    planner = MigrationPlanner(link="pcie")
+    est = planner.estimate("t0", src, dst, probe)
+    assert est.mode == "cold"
+    rec = planner.migrate("t0", src, dst, probe)
+    assert rec.transfer is None and rec.snapshot is None
+    # cold means the destination pays a full-context miss on first dispatch
+    dst.dispatch(probe)
+    assert dst.sched.devices[0].cache.stats.misses == 1
+
+
+def test_forced_policies_and_unknown_tenant():
+    src = _warm_host("src", "t0", "noc")
+    dst = Host.from_registry("dst", {"gemmini": 1, "opengemm": 1}, link="noc")
+    probe = _big_ctx_request("t0", ptr=0x2000)
+    cold = MigrationPlanner(link="noc", policy="cold")
+    assert cold.estimate("t0", src, dst, probe).mode == "cold"
+    # a tenant with no resident context anywhere can only go cold
+    auto = MigrationPlanner(link="noc")
+    est = auto.estimate("ghost", src, dst, probe)
+    assert est.mode == "cold" and est.context_fields == 0
+
+
+def test_estimate_and_migrate_agree_on_the_destination_device():
+    """A kind-unrestricted probe must not let estimate() price one device
+    kind while migrate() installs the snapshot on another: both follow the
+    snapshot's kind."""
+    src = Host.from_registry("src", {"gemmini": 1, "opengemm": 1}, link="noc")
+    for i in range(3):  # tenant is warm only on the opengemm device
+        src.dispatch(LaunchRequest("t0", TILE, {"A": 0x1000 + 64 * i},
+                                   accel="opengemm"))
+    dst = Host.from_registry("dst", {"gemmini": 1, "opengemm": 1}, link="noc")
+    probe = LaunchRequest("t0", TILE, {"A": 0x2000})  # accel=None
+
+    planner = MigrationPlanner(link="noc", policy="warm")
+    est = planner.estimate("t0", src, dst, probe)
+    # priced in opengemm units (4 B/field): delta = pointer + launch,
+    # cold = 3 dims + pointer + launch — not gemmini's 8 B/field
+    assert est.warm_port_bytes == 2 * OG.bytes_per_field
+    assert est.cold_port_bytes == 5 * OG.bytes_per_field
+    rec = planner.migrate("t0", src, dst, probe)
+    assert rec.snapshot.accel == "opengemm"
+    og = next(d for d in dst.sched.devices if d.model.name == "opengemm")
+    assert og.cache.context("t0") is not None
+
+
+def test_concurrent_migrations_contend_for_the_link():
+    """Two warm hand-offs on one planner share the wire: the second's
+    transfer starts only after the first's completes."""
+    src = _warm_host("src", "t0", "noc")
+    for i in range(3):
+        src.dispatch(_big_ctx_request("t1", ptr=0x9000 + 64 * i))
+    dst = Host.from_registry("dst", {"gemmini": 1, "opengemm": 1}, link="noc")
+
+    planner = MigrationPlanner(link="noc", policy="warm")
+    a = planner.migrate("t0", src, dst, _big_ctx_request("t0", ptr=0x2000), now=0.0)
+    b = planner.migrate("t1", src, dst, _big_ctx_request("t1", ptr=0x9100), now=0.0)
+    assert b.transfer.start == a.transfer.end
+    assert planner.port.busy_cycles == a.transfer.cycles + b.transfer.cycles
+
+
+# ------------------------------------------------------- cross-run warmth
+
+
+def test_context_store_roundtrips_contexts_across_runs(tmp_path):
+    run1 = _warm_host("h0", "t0", "noc")
+    snaps = capture_contexts(run1)
+    assert [s.tenant for s in snaps] == ["t0"]
+
+    store = ContextStore(str(tmp_path))
+    store.save(1, snaps)
+    restored = ContextStore(str(tmp_path)).restore()
+    assert restored["t0"] == snaps[0]
+
+    # a fresh "run" restores warm: first dispatch is a context hit
+    run2 = Host.from_registry("h0", {"gemmini": 1, "opengemm": 1}, link="noc")
+    assert install_contexts(run2, restored.values()) == 1
+    run2.dispatch(_big_ctx_request("t0", ptr=0x2000))
+    gem = run2.sched.devices[0]
+    assert gem.cache.stats.hits == 1 and gem.cache.stats.misses == 0
+
+
+def test_context_store_empty_and_kind_filter(tmp_path):
+    assert ContextStore(str(tmp_path)).restore() == {}
+    # snapshots for kinds a host lacks are skipped, not crashed on
+    host = Host.from_registry("h0", {"opengemm": 1})
+    snap = ContextSnapshot("t0", "gemmini", 8, {"M": 8})
+    assert install_contexts(host, [snap]) == 0
+
+
+# ----------------------------------------------------------- integration
+
+
+def test_scheduler_over_fabric_pays_the_wire():
+    """The same stream costs strictly more behind a NoC than on the
+    core-local port, and more again over PCIe — and the per-link telemetry
+    accounts a busy wire."""
+    def run(link):
+        s = Scheduler.from_registry({"opengemm": 1}, link=link)
+        rep = s.run([LaunchRequest("t0", TILE, {"A": 0x1000 + 64 * i})
+                     for i in range(16)])
+        return rep
+
+    csr, noc_rep, pcie_rep = run("csr"), run("noc"), run("pcie")
+    assert csr.makespan < noc_rep.makespan < pcie_rep.makespan
+    (tel,) = noc_rep.links.values()
+    assert tel.kind == "noc" and tel.transfers == 16
+    assert 0.0 < tel.occupancy <= 1.0
+    assert len(tel.timeline()) == 16
+    (csr_tel,) = csr.links.values()
+    assert csr_tel.busy_cycles == 0.0  # zero wire cost on the local port
+
+
+def test_fabric_roofline_point_degrades_with_link_distance():
+    """Same traffic, slower link ⇒ lower link-effective BW_cfg (the
+    transfer ceiling of "Know your rooflines!")."""
+    def bw(link):
+        h = Host.from_registry("h0", {"opengemm": 1}, link=link)
+        for i in range(8):
+            h.dispatch(LaunchRequest("t0", TILE, {"A": 0x1000 + 64 * i}))
+        return h.fabric_roofline_point(h.clock).bw_config
+
+    assert bw("noc") > bw("pcie") > 0.0
+    pt = fabric_roofline_point("x", total_ops=1000, config_bytes=100,
+                               host_cycles=50, link_cycles=50, makespan=200,
+                               p_peak=512.0)
+    assert pt.bw_config == 1.0  # 100 bytes / (50 + 50) cycles
+
+
+def test_router_prefers_the_nearer_host_when_both_are_cold():
+    """Link distance is in the probe: an idle CSR-local host must win an
+    idle PCIe host for a cold tenant."""
+    near = Host.from_registry("near", {"opengemm": 1}, link="csr")
+    far = Host.from_registry("far", {"opengemm": 1}, link="pcie")
+    cluster = Cluster([far, near])  # order must not matter
+    req = LaunchRequest("t0", TILE, {"A": 1}, accel="opengemm")
+    assert cluster.router.route(req, 0.0).id == "near"
+
+
+def test_cluster_report_carries_fabric_telemetry():
+    cluster = Cluster.uniform(2, {"opengemm": 1}, link="noc")
+    reqs = [LaunchRequest(f"t{i % 4}", TILE, {"A": 0x1000 * (i % 4)},
+                          arrival_time=float(10 * i)) for i in range(24)]
+    rep = cluster.run(reqs)
+    assert set(rep.port_wait) == {"h0", "h1"}
+    assert all(w >= 0.0 for w in rep.port_wait.values())
+    assert len(rep.fabric_roofline) == 2
+    links = rep.links()
+    assert set(links) == {"h0/cfg[noc]", "h1/cfg[noc]"}
+    assert sum(tel.transfers for tel in links.values()) == 24
