@@ -1,0 +1,64 @@
+"""repro.bridge — the closed-loop serving bridge.
+
+Until now the cluster ate *synthetic* GEMM-tile launch requests
+(``cluster.traffic``), while the real decode launch path lived apart in
+``serving.ServingEngine``. This package replaces the synthetic seam with
+the real one: serving engines **are** the cluster's tenants, and the
+multi-host roofline/SLO numbers are produced by actual
+``{tokens, positions, live-mask}`` decode descriptors — the workload the
+paper's §5.4 deduplicated-configuration serving design was written for.
+
+* :mod:`~repro.bridge.descriptors` — launch-descriptor → register-field
+  translation, built so the engine executor's leaf-granular descriptor
+  cache and the cluster device's field-granular config-state cache make
+  identical elision decisions on the same stream.
+* :mod:`~repro.bridge.tenant` — :class:`TenantEngine` wraps one engine as
+  one tenant: mirrors its launch stream (via ``ServingEngine.on_launch``,
+  observation-only — bridged token output stays bit-identical) and states
+  the exact accounting identity between the two caches.
+* :mod:`~repro.bridge.driver` — :class:`ClosedLoopDriver`: a tenant emits
+  its next decode launch only after the previous one completes, so
+  queueing delay throttles token throughput (closed-loop — the opposite
+  contract from ``run_open_loop``).
+* :mod:`~repro.bridge.report` — :class:`BridgeReport`: tokens/kcycle
+  goodput, per-tenant decode-latency percentiles, per-step descriptor-byte
+  timelines, serving roofline points, and the engine↔cluster config-byte
+  parity check.
+
+Slot residency completes the picture: a tenant's KV cache lives on the
+host that ran its first launch (``Host.adopt_context``), and a sticky
+router (``Cluster(..., sticky=True)``) binds its decode launches there —
+round-robin baselines keep shuffling tenants and pay full descriptor
+re-sends, which ``benchmarks/serving_bridge.py`` measures as a p99
+decode-latency gap at every load cell.
+"""
+
+from . import descriptors, driver, report, tenant
+from .descriptors import (
+    descriptor_fields,
+    descriptor_nbytes,
+    descriptor_request,
+    leaf_digest,
+    padded_nbytes,
+)
+from .driver import ClosedLoopDriver, StepRecord
+from .report import BridgeReport, build_bridge_report
+from .tenant import TenantEngine, decode_tile
+
+__all__ = [
+    "BridgeReport",
+    "ClosedLoopDriver",
+    "StepRecord",
+    "TenantEngine",
+    "build_bridge_report",
+    "decode_tile",
+    "descriptor_fields",
+    "descriptor_nbytes",
+    "descriptor_request",
+    "descriptors",
+    "driver",
+    "leaf_digest",
+    "padded_nbytes",
+    "report",
+    "tenant",
+]

@@ -1,0 +1,133 @@
+"""ClosedLoopDriver — N serving engines against the cluster, with feedback.
+
+``Cluster.run`` / ``Scheduler.run_open_loop`` are *open-loop*: the request
+stream is fixed up front and arrives on its own clock no matter how far
+the pool falls behind. Production decode is not like that — a tenant
+cannot ask for token *t+1* until token *t* exists. This driver closes the
+loop: each tenant's next step is released only at the completion cycle of
+its previous step's launches, so queueing delay does not just show up in
+a percentile — it **throttles token throughput** (the cluster's
+tokens/kcycle falls as ports congest, which no open-loop replay can show).
+
+The event loop is a single min-heap over tenant ready-times (ties broken
+by tenant name, so runs are deterministic): pop the earliest-ready tenant,
+advance its engine one continuous-batching step (real JAX compute — the
+engine's own launch path, not a synthetic proxy), mirror the step's
+captured descriptors into launch requests arriving back-to-back (each
+launch's arrival is its predecessor's completion — prefill chains
+serialize the same way the engine's staging ring issues them), route and
+dispatch them, and push the tenant back at the last launch's retirement.
+
+On a tenant's first dispatch the chosen host adopts its slot context
+(``Host.adopt_context``): under a sticky router every later launch of
+that tenant is bound to this home (KV-cache residency), while non-sticky
+baselines (round-robin) keep shuffling it — the A/B the benchmark runs.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+from ..cluster.router import Cluster
+from .report import BridgeReport, build_bridge_report
+from .tenant import TenantEngine
+
+
+@dataclass(frozen=True)
+class StepRecord:
+    """One engine step's closed-loop life on the cluster."""
+
+    tenant: str
+    step: int  # this tenant's step index
+    arrival: float  # cycle the step's first launch entered the cluster
+    completion: float  # cycle its last launch retired
+    tokens: int  # tokens the step produced
+    launches: int  # launches the step issued (prefill chains > 1)
+    bytes_sent: int  # config bytes that crossed the boundary
+    bytes_elided: int  # config bytes resident state kept off the wire
+
+    @property
+    def latency(self) -> float:
+        """Step latency — what a decode-latency SLO is written against."""
+        return self.completion - self.arrival
+
+
+class ClosedLoopDriver:
+    """Drives bridged tenant engines to completion against one cluster."""
+
+    def __init__(self, tenants: Sequence[TenantEngine], cluster: Cluster,
+                 *, start_offsets: Mapping[str, float] | None = None):
+        assert tenants, "need at least one tenant engine"
+        names = [t.tenant for t in tenants]
+        assert len(set(names)) == len(names), f"duplicate tenants in {names}"
+        self.tenants = {t.tenant: t for t in tenants}
+        self.cluster = cluster
+        self.steps: list[StepRecord] = []
+        self._offsets = dict(start_offsets or {})
+
+    def _dispatch(self, te: TenantEngine, desc: dict, now: float):
+        """Route + dispatch one mirrored launch; returns its
+        :class:`~repro.sched.telemetry.LaunchRecord` — its ``end`` is the
+        feedback edge of the closed loop. The record is matched by
+        (tenant, arrival), not taken as ``launch_log[-1]``: a
+        priority-carrying tenant's dispatch can preempt a staged launch,
+        whose victim is re-dispatched *after* the preemptor and would
+        otherwise be misread as this launch's record. A tenant never has
+        two launches with one arrival time — the closed loop serializes
+        its stream."""
+        req = te.request(desc, arrival_time=now)
+        router = self.cluster.router
+        host = router.route(req, now=now)
+        dev = host.dispatch(req)
+        if router.home(te.tenant) is None:
+            # first launch anywhere: the KV cache materializes here
+            host.adopt_context(te.tenant)
+        for rec in reversed(dev.telemetry.launch_log):
+            if rec.tenant == req.tenant and rec.arrival == req.arrival_time:
+                return rec
+        raise AssertionError(
+            f"dispatched launch for {req.tenant!r} left no record on {dev.id}")
+
+    def run(self, max_steps: int = 100_000) -> BridgeReport:
+        """Drain every tenant engine; returns the bridged report."""
+        ready = [(self._offsets.get(name, 0.0), name)
+                 for name in sorted(self.tenants)]
+        heapq.heapify(ready)
+        total = 0
+        while ready:
+            now, name = heapq.heappop(ready)
+            te = self.tenants[name]
+            if te.done:
+                continue
+            produced, descs = te.step()
+            total += 1
+            assert total <= max_steps, f"closed loop exceeded {max_steps} steps"
+            if not descs:
+                # a step that launched nothing means the engine drained
+                # (live slots and queue both empty) — retire the tenant
+                assert te.done, f"{name} stepped without launching or draining"
+                continue
+            t = now
+            sent = elided = 0
+            for desc in descs:
+                rec = self._dispatch(te, desc, t)
+                t = rec.end
+                sent += rec.bytes_sent
+                elided += rec.bytes_elided
+            self.steps.append(StepRecord(
+                tenant=name,
+                step=te.steps,
+                arrival=now,
+                completion=t,
+                tokens=produced,
+                launches=len(descs),
+                bytes_sent=sent,
+                bytes_elided=elided,
+            ))
+            heapq.heappush(ready, (t, name))
+        for te in self.tenants.values():
+            te.drain()
+        return build_bridge_report(self.cluster, self.steps,
+                                   list(self.tenants.values()))

@@ -1,0 +1,155 @@
+"""BridgeReport — the closed-loop run folded into the repo's vocabulary.
+
+Three views of one run, mutually checkable:
+
+* the **cluster view** — the ordinary :class:`~repro.cluster.slo.ClusterReport`
+  (per-launch percentiles, per-host roofline points, link telemetry), with
+  token-level :class:`~repro.cluster.slo.TenantServing` stats attached;
+* the **step view** — per-tenant decode-step latencies and descriptor-byte
+  timelines built from the driver's :class:`StepRecord` log;
+* the **accounting parity** — :meth:`BridgeReport.config_parity` compares,
+  per tenant, the bytes the cluster devices report against the engine's own
+  ``config_traffic()`` plus the two documented launch-path terms
+  (launch-command writes, tile registers). The two caches are independent
+  implementations fed the same stream; the identity holding is evidence
+  that slot-residency routing preserved warmth end to end, and its failure
+  is the first observable of residency loss (eviction, a spilled launch).
+
+Serving roofline: :meth:`serving_roofline` places each tenant on the
+configuration roofline with **token work over descriptor bytes** as I_OC
+(``core.roofline.decode_roofline_point``) — the multi-host serving points
+the paper's Eq. 4 analysis was built to answer for, now produced by the
+actual decode launch path instead of a GEMM proxy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Sequence
+
+from ..cluster.slo import ClusterReport, TenantServing, build_report
+from ..core.roofline import RooflinePoint, decode_roofline_point
+from .tenant import TenantEngine
+
+if TYPE_CHECKING:  # the driver imports this module; avoid the cycle
+    from .driver import StepRecord
+
+
+@dataclass
+class BridgeReport:
+    """Everything observed about one closed-loop bridged run."""
+
+    cluster: ClusterReport
+    steps: list["StepRecord"]
+    engine_traffic: dict[str, dict[str, float]]  # tenant -> config_traffic()
+    expected: dict[str, dict[str, float]]  # tenant -> expected cluster bytes
+    ops_per_token: dict[str, float]  # tenant -> decode-tile ops per token
+    p_peak: dict[str, float]  # tenant -> its device kind's peak ops/cycle
+
+    # -- tokens --------------------------------------------------------------
+
+    @property
+    def serving(self) -> dict[str, TenantServing]:
+        return self.cluster.serving
+
+    @property
+    def tokens(self) -> int:
+        return self.cluster.tokens
+
+    @property
+    def tokens_per_kcycle(self) -> float:
+        return self.cluster.tokens_per_kcycle
+
+    def decode_latencies(self, tenant: str) -> list[float]:
+        return [s.latency for s in self.steps if s.tenant == tenant]
+
+    # -- descriptor traffic --------------------------------------------------
+
+    def step_timeline(self, tenant: str) -> list[tuple[float, int, int]]:
+        """Per-step ``(arrival, bytes_sent, bytes_elided)`` for one tenant —
+        the decode-step descriptor-byte timeline (launches of one step are
+        folded; ``cluster.descriptor_timeline`` keeps them separate)."""
+        return [(s.arrival, s.bytes_sent, s.bytes_elided)
+                for s in self.steps if s.tenant == tenant]
+
+    def tenant_bytes(self, tenant: str) -> dict[str, float]:
+        """Cluster-side config bytes for one tenant, summed over hosts."""
+        recs = [r for r in self.cluster.records if r.tenant == tenant]
+        return {
+            "bytes_sent": float(sum(r.bytes_sent for r in recs)),
+            "bytes_elided": float(sum(r.bytes_elided for r in recs)),
+        }
+
+    def config_parity(self) -> dict[str, dict[str, float | bool]]:
+        """Per tenant: the engine's expected accounting vs. what the
+        cluster devices actually reported. ``matched`` means both the sent
+        and the elided bytes agree exactly — the bridged launch path sent
+        precisely the descriptor deltas the engine's own cache says it
+        should have (plus the documented launch/tile terms folded into
+        ``expected`` by ``TenantEngine.expected_cluster_bytes``)."""
+        out: dict[str, dict[str, float | bool]] = {}
+        for tenant, want in self.expected.items():
+            got = self.tenant_bytes(tenant)
+            out[tenant] = {
+                "engine_bytes_sent": self.engine_traffic[tenant]["bytes_sent"],
+                "engine_bytes_elided": self.engine_traffic[tenant]["bytes_elided"],
+                "expected_bytes_sent": want["bytes_sent"],
+                "expected_bytes_elided": want["bytes_elided"],
+                "cluster_bytes_sent": got["bytes_sent"],
+                "cluster_bytes_elided": got["bytes_elided"],
+                "matched": (got["bytes_sent"] == want["bytes_sent"]
+                            and got["bytes_elided"] == want["bytes_elided"]),
+            }
+        return out
+
+    # -- roofline ------------------------------------------------------------
+
+    def serving_roofline(self) -> list[RooflinePoint]:
+        """One configuration-roofline point per bridged tenant: I_OC is
+        token work over the descriptor bytes actually sent for it, BW_cfg
+        the effective bandwidth those bytes saw on the config port."""
+        points = []
+        for tenant, stats in sorted(self.cluster.serving.items()):
+            recs = [r for r in self.cluster.records if r.tenant == tenant]
+            if not recs:
+                continue
+            points.append(decode_roofline_point(
+                f"serve[{tenant}]",
+                tokens=stats.tokens,
+                ops_per_token=self.ops_per_token[tenant],
+                descriptor_bytes=max(sum(r.bytes_sent for r in recs), 1),
+                config_cycles=sum(r.config_cycles for r in recs),
+                makespan=self.cluster.makespan,
+                p_peak=self.p_peak[tenant],
+            ))
+        return points
+
+
+def build_bridge_report(cluster, steps: Sequence["StepRecord"],
+                        tenants: Sequence[TenantEngine]) -> BridgeReport:
+    """Fold the driver's step log and the cluster state into one report."""
+    slo = {te.tenant: te.slo_cycles for te in tenants
+           if te.slo_cycles is not None}
+    report = build_report(cluster.hosts, slo=slo)
+    serving = {
+        te.tenant: TenantServing.from_steps(
+            te.tenant,
+            [s.latency for s in steps if s.tenant == te.tenant],
+            te.tokens,
+            report.makespan,
+        )
+        for te in tenants
+    }
+    report.attach_serving(serving)
+    return BridgeReport(
+        cluster=report,
+        steps=list(steps),
+        engine_traffic={te.tenant: te.config_traffic() for te in tenants},
+        expected={te.tenant: te.expected_cluster_bytes() for te in tenants},
+        ops_per_token={
+            te.tenant: 2.0 * te.dims[0] * te.dims[1] * te.dims[2]
+            / max(te.engine.max_slots, 1)
+            for te in tenants
+        },
+        p_peak={te.tenant: te.model.p_peak for te in tenants},
+    )

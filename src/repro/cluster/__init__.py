@@ -32,7 +32,7 @@ congestion and residency.
 from . import host, router, slo, traffic
 from .host import Host
 from .router import ROUTERS, Cluster, Router
-from .slo import ClusterReport, TenantSLO, build_report, percentile
+from .slo import ClusterReport, TenantSLO, TenantServing, build_report, percentile
 from .traffic import ARRIVALS, TenantProfile, generate, slo_targets
 
 __all__ = [
@@ -44,6 +44,7 @@ __all__ = [
     "Router",
     "TenantProfile",
     "TenantSLO",
+    "TenantServing",
     "build_report",
     "generate",
     "host",

@@ -27,6 +27,11 @@ What the router reads off a host:
   tenant contexts make a host cheap.
 * :meth:`warm_bytes` — how many of the request's config bytes this host's
   caches could elide right now (tenant-context residency).
+* :meth:`hosts_context` — whether this host holds a tenant's *slot
+  context* (a hosted serving-engine shard's KV cache, ``repro.bridge``):
+  unlike register-cache warmth, slot residency is binding — a decode
+  launch must run where the KV cache lives, so the sticky router routes
+  on it before any cost comparison.
 """
 
 from __future__ import annotations
@@ -62,6 +67,10 @@ class Host:
         self.sched = Scheduler(pool, depth=depth, max_contexts=max_contexts,
                                policy=policy, cache_enabled=cache_enabled,
                                link=link)
+        # tenants whose *slot context* (a hosted engine shard's KV cache)
+        # lives on this host — the binding residency the sticky router
+        # consults; distinct from register-cache warmth, which is advisory
+        self._slot_contexts: set[str] = set()
 
     @classmethod
     def from_registry(cls, host_id: str, counts: dict[str, int],
@@ -109,18 +118,51 @@ class Host:
         load signal for cold-tie spreading)."""
         return sum(d.telemetry.launches for d in self.sched.devices)
 
+    # -- slot residency (hosted engine shards, ``repro.bridge``) -------------
+
+    def adopt_context(self, tenant: str) -> None:
+        """Record that ``tenant``'s slot context (its serving-engine shard's
+        KV cache) lives on this host: its decode launches are sticky here
+        until the context is dropped (a finished or migrated tenant)."""
+        self._slot_contexts.add(tenant)
+
+    def drop_context(self, tenant: str) -> None:
+        self._slot_contexts.discard(tenant)
+
+    def hosts_context(self, tenant: str) -> bool:
+        """Does this host hold ``tenant``'s slot context? The binding
+        residency signal: a decode launch reads and writes the KV cache,
+        so it cannot run anywhere else without a migration."""
+        return tenant in self._slot_contexts
+
+    @property
+    def resident_tenants(self) -> set[str]:
+        """Tenants whose slot contexts (engine shards) this host hosts."""
+        return set(self._slot_contexts)
+
     def port_wait_estimate(self, req: LaunchRequest | None = None,
                            now: float = 0.0) -> float:
         """Cycles a request arriving at ``now`` waits before its first
-        config write can start here — the control thread's committed time.
-        The **single** backlog estimate shared by router probes
+        config write can start here — the later of the control thread's
+        committed time and the fabric wire's in-flight transfer. The
+        **single** backlog estimate shared by router probes
         (:meth:`probe_cost`) and the SLO report (``cluster.slo``), so the
-        two can never drift apart. The fabric wire never outruns the
-        control thread today (the host is conservatively captive for its
-        own transfers; DMA/host overlap is a ROADMAP follow-on), and
-        ``req`` is reserved for request-dependent waits (per-tenant port
-        quotas) — currently every request sees the same wait."""
-        return max(0.0, self.sched.host - now)
+        two can never drift apart.
+
+        The two terms combine by ``max()``, never by ``+``: the host is
+        conservatively captive for the wire time of its own config
+        transfers, so the in-flight transfer is already inside the host
+        clock — summing would double-count it. The wire interval is
+        half-open ``[start, end)``: a transfer that completes at exactly
+        ``now`` holds the port for zero further cycles (the off-by-one a
+        closed interval would introduce at the boundary). The wire term
+        only bites once DMA/host overlap (ROADMAP) lets transfers outrun
+        the control thread. ``req`` is reserved for request-dependent
+        waits (per-tenant port quotas) — currently every request sees the
+        same wait."""
+        wire_end = self.sched.port.busy_until
+        wire_wait = wire_end - now if wire_end > now else 0.0
+        return max(0.0, self.sched.host - now, wire_wait)
 
     def port_backlog(self, now: float) -> float:
         """Cycles of config work already committed past the wall clock —

@@ -20,7 +20,16 @@ near one's congestion outweighs the distance — no separate tuning knob.
 Tenants therefore pin to the hosts that hold their warm
 :class:`~repro.sched.state_cache.ConfigStateCache` contexts until port
 congestion spills them — affinity and load balance again fall out of one
-number. Classical routers ride along for comparison, ``POLICIES``-style:
+number.
+
+**Slot residency** (``sticky=True``, the serving bridge) is stronger than
+either term: a hosted serving-engine shard's KV cache lives on exactly one
+host (``Host.adopt_context``), and a decode launch reads *and writes* that
+cache — it cannot run anywhere else without a migration. A sticky router
+therefore returns the resident host before any cost comparison; the cost
+model only picks the *first* home (and re-picks after an explicit
+``drop_context``). Classical routers ride along for comparison,
+``POLICIES``-style:
 
 * ``round_robin`` — the naive baseline; migrating tenants across hosts
   thrashes every context cache.
@@ -58,11 +67,17 @@ class Router:
     """Pluggable cross-host placement policy."""
 
     def __init__(self, hosts: Sequence[Host], policy: str = "affinity",
-                 seed: int = 0, stickiness: float = 4.0):
+                 seed: int = 0, stickiness: float = 4.0,
+                 sticky: bool = False):
         assert policy in ROUTERS, policy
         assert hosts, "need at least one host"
         self.hosts = list(hosts)
         self.policy = policy
+        # slot-residency-aware routing: when a host holds the tenant's slot
+        # context (Host.adopt_context — a hosted engine shard's KV cache),
+        # route there unconditionally; the policy below only places tenants
+        # that have no home yet
+        self.sticky = sticky
         # affinity hysteresis: a warm context's per-launch savings are
         # credited ~stickiness launches ahead, so transient port-backlog
         # spikes (one sequential macro-op deep) don't evict a residency
@@ -78,8 +93,19 @@ class Router:
             raise KeyError(f"no host carries a {req.accel!r} device")
         return hosts
 
+    def home(self, tenant: str) -> Host | None:
+        """The host holding ``tenant``'s slot context, if any."""
+        for h in self.hosts:
+            if h.hosts_context(tenant):
+                return h
+        return None
+
     def route(self, req: LaunchRequest, now: float) -> Host:
         hosts = self._eligible(req)
+        if self.sticky:
+            home = self.home(req.tenant)
+            if home is not None and home.can_serve(req):
+                return home  # KV residency is binding, not advisory
         if len(hosts) == 1:
             return hosts[0]
         if self.policy == "round_robin":
@@ -109,9 +135,10 @@ class Cluster:
     """A pool of hosts + a router: the open-loop serving fabric."""
 
     def __init__(self, hosts: Sequence[Host], *, policy: str = "affinity",
-                 seed: int = 0):
+                 seed: int = 0, sticky: bool = False):
         self.hosts = list(hosts)
-        self.router = Router(self.hosts, policy=policy, seed=seed)
+        self.router = Router(self.hosts, policy=policy, seed=seed,
+                             sticky=sticky)
 
     @classmethod
     def uniform(
@@ -126,18 +153,20 @@ class Cluster:
         cache_enabled: bool = True,
         seed: int = 0,
         link=None,
+        sticky: bool = False,
     ) -> "Cluster":
         """``Cluster.uniform(4, {"gemmini": 1, "opengemm": 1})`` — n
         identical hosts, each carrying one shard of the mixed pool.
         ``link`` names the fabric every host's config port crosses
-        (default: the paper's core-local CSR)."""
+        (default: the paper's core-local CSR); ``sticky`` turns on
+        slot-residency-aware routing (the serving bridge's decode path)."""
         hosts = [
             Host.from_registry(f"h{i}", dict(counts), depth=depth,
                                max_contexts=max_contexts, policy=host_policy,
                                cache_enabled=cache_enabled, link=link)
             for i in range(n_hosts)
         ]
-        return cls(hosts, policy=policy, seed=seed)
+        return cls(hosts, policy=policy, seed=seed, sticky=sticky)
 
     def dispatch(self, req: LaunchRequest) -> Host:
         host = self.router.route(req, now=req.arrival_time)

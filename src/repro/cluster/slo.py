@@ -23,7 +23,7 @@ this layer, bit-stable across platforms).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Mapping, Sequence
 
 from ..core.interp import Trace
@@ -90,6 +90,37 @@ class TenantSLO:
         )
 
 
+@dataclass(frozen=True)
+class TenantServing:
+    """One bridged tenant's token-level service quality (``repro.bridge``):
+    the closed-loop observables a serving SLO is written against — decode
+    step latency percentiles (arrival of the step's first launch to
+    retirement of its last) and token goodput over the run's makespan.
+    Sits beside :class:`TenantSLO`, which speaks per-*launch*; this speaks
+    per-*decode-step*, the unit a user-visible token corresponds to."""
+
+    tenant: str
+    tokens: int
+    steps: int
+    p50_decode: float
+    p95_decode: float
+    p99_decode: float
+    tokens_per_kcycle: float  # token goodput normalized to the run makespan
+
+    @classmethod
+    def from_steps(cls, tenant: str, latencies: Sequence[float],
+                   tokens: int, makespan: float) -> "TenantServing":
+        return cls(
+            tenant=tenant,
+            tokens=tokens,
+            steps=len(latencies),
+            p50_decode=percentile(latencies, 50),
+            p95_decode=percentile(latencies, 95),
+            p99_decode=percentile(latencies, 99),
+            tokens_per_kcycle=1000.0 * tokens / makespan if makespan else 0.0,
+        )
+
+
 @dataclass
 class ClusterReport:
     """Aggregate of one open-loop cluster run."""
@@ -105,6 +136,13 @@ class ClusterReport:
     # routing can never disagree about backlog
     port_wait: dict[str, float]
     fabric_roofline: list[RooflinePoint]  # one point per host (link-effective BW)
+    # tenant -> token-level serving stats, attached by the closed-loop
+    # bridge (empty for plain open-loop runs)
+    serving: dict[str, TenantServing] = field(default_factory=dict)
+
+    def attach_serving(self, stats: Mapping[str, TenantServing]) -> None:
+        """Fold bridged token-level stats in (``repro.bridge.report``)."""
+        self.serving = dict(stats)
 
     # -- traffic -------------------------------------------------------------
 
@@ -132,6 +170,30 @@ class ClusterReport:
     def deadline_misses(self) -> int:
         """Deadline-carrying launches that retired late, cluster-wide."""
         return sum(1 for r in self.records if r.missed_deadline)
+
+    @property
+    def tokens(self) -> int:
+        """Tokens produced by bridged tenants (0 for open-loop GEMM runs)."""
+        return sum(s.tokens for s in self.serving.values())
+
+    @property
+    def tokens_per_kcycle(self) -> float:
+        """Cluster token goodput — the closed-loop analogue of ``goodput``:
+        tokens the bridged engines actually produced per 1000 cycles of the
+        run (queueing delay throttles this directly, unlike open-loop)."""
+        if not self.makespan:
+            return 0.0
+        return 1000.0 * self.tokens / self.makespan
+
+    def descriptor_timeline(
+        self, tenant: str | None = None
+    ) -> list[tuple[float, int, int]]:
+        """Per-launch ``(issue, bytes_sent, bytes_elided)`` across every
+        host, in arrival order — the cluster-wide descriptor-byte timeline
+        (cf. ``SchedulerReport.descriptor_timeline``)."""
+        return [(r.issue, r.bytes_sent, r.bytes_elided)
+                for r in self.records
+                if tenant is None or r.tenant == tenant]
 
     def links(self) -> dict[str, LinkTelemetry]:
         """Per-host fabric config-port telemetry (busy/occupancy timelines),

@@ -149,6 +149,38 @@ def fabric_roofline_point(
     )
 
 
+def decode_roofline_point(
+    name: str,
+    *,
+    tokens: float,
+    ops_per_token: float,
+    descriptor_bytes: float,
+    config_cycles: float,
+    makespan: float,
+    p_peak: float,
+) -> RooflinePoint:
+    """Configuration-roofline placement for a *serving* workload
+    (``repro.bridge``): the operational unit is the decode step, so I_OC is
+    token work over the **descriptor bytes actually sent** — the
+    {tokens, positions, live-mask} delta each step ships against the
+    device-resident KV cache and weights (§5.4's deduplicated-configuration
+    serving design). ``BW_cfg`` is Eq. 4 over the cycles those bytes held
+    the config port. Descriptor elision moves a serving point rightward on
+    exactly the same axes as the compiled-program points — the roofline now
+    answers "is this *LLM serving* configuration-bound?", not a GEMM proxy.
+    """
+    total_ops = tokens * ops_per_token
+    bw = effective_config_bandwidth(descriptor_bytes, 0.0,
+                                    max(config_cycles, 1e-12))
+    return RooflinePoint(
+        name=name,
+        i_oc=total_ops / max(descriptor_bytes, 1e-12),
+        performance=total_ops / makespan if makespan else 0.0,
+        p_peak=p_peak,
+        bw_config=bw,
+    )
+
+
 # --------------------------------------------------------------------------
 # §4.6 worked example: Gemmini output-stationary 64×64×64 matmul
 # --------------------------------------------------------------------------

@@ -50,6 +50,7 @@ class LaunchRecord:
     bytes_sent: int
     priority: int = 0
     deadline: float | None = None  # absolute EDF deadline (None = best effort)
+    bytes_elided: int = 0  # config bytes the device already held (resident)
 
     @property
     def queue_delay(self) -> float:
@@ -116,6 +117,7 @@ class DeviceTelemetry:
             bytes_sent=bytes_sent,
             priority=priority,
             deadline=deadline,
+            bytes_elided=bytes_elided,
         ))
         self.busy_cycles += end - start
         self.total_ops += ops
@@ -260,6 +262,18 @@ class SchedulerReport:
         records = [r for d in self.devices.values() for r in d.launch_log]
         records.sort(key=lambda r: (r.issue, r.start, r.tenant))
         return records
+
+    def descriptor_timeline(
+        self, tenant: str | None = None
+    ) -> list[tuple[float, int, int]]:
+        """Per-launch ``(issue, bytes_sent, bytes_elided)`` in issue order —
+        the descriptor-byte timeline of one tenant's stream (or the whole
+        run): how much of each launch's configuration actually crossed the
+        boundary vs. rode on device-resident state. The serving bridge
+        (``repro.bridge``) plots these per decode step."""
+        return [(r.issue, r.bytes_sent, r.bytes_elided)
+                for r in self.launch_log()
+                if tenant is None or r.tenant == tenant]
 
     def queue_delays(self) -> dict[str, list[float]]:
         """Per-tenant queueing delays (arrival → device start)."""

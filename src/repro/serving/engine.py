@@ -47,7 +47,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, model, params, *, max_slots: int = 4, max_len: int = 256,
-                 eos_id: int | None = None, launch_depth: int = 2):
+                 eos_id: int | None = None, launch_depth: int = 2,
+                 decode_fn=None, on_launch=None):
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -59,7 +60,16 @@ class ServingEngine:
         self.slot_req: list[Request | None] = [None] * max_slots
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        # decode_fn lets N engines of one model share a single compiled
+        # step (the bridge runs many tenant engines of the same
+        # architecture; each call still passes its own donated cache)
+        self._decode = decode_fn or jax.jit(model.decode_step,
+                                            donate_argnums=(1,))
+        # launch observer: called with every launch descriptor *after* it
+        # goes through the executor — the seam ``repro.bridge`` taps to
+        # mirror the real decode launch stream into cluster LaunchRequests
+        # without perturbing the compute (observation only, no reply)
+        self.on_launch = on_launch
         # scheduled launch path: the executor owns the staging ring (depth
         # launches in flight) and the config-state cache — one context, the
         # engine is one tenant of its device. Its descriptor elision is the
@@ -88,7 +98,16 @@ class ServingEngine:
         (_, self.cache), logits = self.executor.launch(
             (self.params, self.cache), desc
         )
+        if self.on_launch is not None:
+            self.on_launch(desc)
         return logits
+
+    @staticmethod
+    def compile_decode(model):
+        """One compiled decode step, shareable across every engine of the
+        same architecture (`decode_fn=`): N bridged tenant engines then pay
+        a single JIT compilation instead of N."""
+        return jax.jit(model.decode_step, donate_argnums=(1,))
 
     # ---------------------------------------------------------------- admin
 

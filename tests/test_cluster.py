@@ -277,3 +277,59 @@ def test_priority_tenant_preempts_staged_launches():
     assert rep.preemptions > 0
     # the preempted work is re-dispatched, never lost
     assert rep.launches == len(reqs)
+
+
+# ------------------------------------------- port-wait boundary + residency
+
+
+def test_port_wait_estimate_boundary_does_not_double_count():
+    """ISSUE 4 satellite regression: the host is captive for the wire time
+    of its own config transfers, so the in-flight transfer is *inside* the
+    host clock — the wait estimate must combine the two terms by max(),
+    never by sum. Pinned at the interval boundary: a transfer completing
+    at exactly the probe cycle holds the port for zero further cycles."""
+    host = Host.from_registry("h0", {"opengemm": 1}, link="noc")
+    host.dispatch(LaunchRequest("t", TILE, {"A": 0x1000}, accel="opengemm"))
+    end = host.port.busy_until
+    assert end > 0.0  # the config transfer occupied the NoC wire
+
+    # mid-transfer probe: exactly the control thread's backlog — a summing
+    # implementation would add the transfer's residual wire time on top
+    mid = end - 1.0
+    assert host.port_wait_estimate(now=mid) == pytest.approx(host.clock - mid)
+
+    # the boundary cycle itself: the transfer is complete, its interval is
+    # half-open [start, end) — zero wire contribution at now == end
+    assert host.port_wait_estimate(now=end) == pytest.approx(
+        max(0.0, host.clock - end))
+
+    # probing at (or past) the committed clock sees no wait at all
+    assert host.port_wait_estimate(now=host.clock) == 0.0
+    assert host.port_wait_estimate(now=host.clock + 1.0) == 0.0
+
+    # and the SLO-report alias agrees at the same boundary
+    assert host.port_backlog(end) == host.port_wait_estimate(now=end)
+
+
+def test_slot_residency_registry_and_sticky_router():
+    """Hosts track which tenants' slot contexts (engine shards) they host;
+    a sticky router binds those tenants' launches there, while non-sticky
+    policies ignore the registry entirely."""
+    hosts = [Host.from_registry(f"h{i}", {"opengemm": 1}) for i in range(3)]
+    hosts[2].adopt_context("t0")
+    assert hosts[2].hosts_context("t0") and not hosts[0].hosts_context("t0")
+    assert hosts[2].resident_tenants == {"t0"}
+
+    req = LaunchRequest("t0", TILE, accel="opengemm")
+    sticky = Router(hosts, policy="round_robin", sticky=True)
+    # every route lands on the resident host, regardless of the rotation
+    assert {sticky.route(req, 0.0).id for _ in range(5)} == {"h2"}
+    assert sticky.home("t0").id == "h2"
+
+    loose = Router(hosts, policy="round_robin", sticky=False)
+    assert {loose.route(req, 0.0).id for _ in range(3)} == {"h0", "h1", "h2"}
+
+    # dropping the context releases the binding
+    hosts[2].drop_context("t0")
+    assert sticky.home("t0") is None
+    assert {sticky.route(req, 0.0).id for _ in range(3)} == {"h0", "h1", "h2"}

@@ -414,6 +414,67 @@ def test_edf_without_deadlines_falls_back_to_priority_order():
     assert q.pop(10.0).tenant == "b"  # both arrived, higher class first
 
 
+def test_edf_mixed_deadline_and_best_effort_queues():
+    """ISSUE 4 satellite: finite-deadline work overtakes the deadline-free
+    backlog it arrived behind, while the best-effort requests keep their
+    own arrival order among themselves (deadline=None sorts last)."""
+    best_effort = [LaunchRequest(f"b{i}", (8, 8, 8), arrival_time=float(i))
+                   for i in range(3)]
+    tight = LaunchRequest("d", (8, 8, 8), arrival_time=2.5, deadline=100.0)
+    q = AdmissionQueue([*best_effort, tight], mode="edf")
+    order = [q.pop(10.0).tenant for _ in range(4)]
+    assert order == ["d", "b0", "b1", "b2"]
+
+
+def test_edf_deadline_ties_break_by_arrival_order():
+    """Equal deadlines are ordered by arrival, deterministically — not by
+    tenant name (the later-named tenant arriving earlier still wins)."""
+    early = LaunchRequest("zz", (8, 8, 8), arrival_time=0.0, deadline=500.0)
+    late = LaunchRequest("aa", (8, 8, 8), arrival_time=5.0, deadline=500.0)
+    q = AdmissionQueue([early, late], mode="edf")
+    assert [q.pop(20.0).tenant, q.pop(20.0).tenant] == ["zz", "aa"]
+    # a full tie (same arrival too) falls back to tenant order — still
+    # deterministic across runs
+    a = LaunchRequest("aa", (8, 8, 8), arrival_time=0.0, deadline=500.0)
+    z = LaunchRequest("zz", (8, 8, 8), arrival_time=0.0, deadline=500.0)
+    q = AdmissionQueue([z, a], mode="edf")
+    assert [q.pop(20.0).tenant, q.pop(20.0).tenant] == ["aa", "zz"]
+
+
+def test_preemption_counters_consistent_after_edf_reordering():
+    """EDF admission composes with priority preemption: after a reordered
+    drain with a preempting arrival, every request still retires exactly
+    once, the preemption is counted once, and the wasted config cycles are
+    exposed — the counters stay mutually consistent."""
+    big = 64 * 8  # long macro-ops so the staging ring is still full
+    reqs = [
+        LaunchRequest("bulk0", (big, 8, 8), accel="opengemm",
+                      arrival_time=0.0, deadline=90_000.0),
+        LaunchRequest("bulk1", (big, 8, 8), accel="opengemm",
+                      arrival_time=1.0, deadline=80_000.0),
+        LaunchRequest("bulk2", (big, 8, 8), accel="opengemm",
+                      arrival_time=2.0, deadline=70_000.0),
+        # arrives once the bulk burst is already staged, with the tightest
+        # deadline AND a preempting priority: EDF pops it ahead of any
+        # still-queued work, and it cancels the newest staged-not-started
+        # bulk launch to take its ring slot
+        LaunchRequest("vip", (8, 8, 8), accel="opengemm",
+                      arrival_time=50.0, priority=2, deadline=500.0),
+    ]
+    s = Scheduler.from_registry({"opengemm": 1}, depth=2)
+    rep = s.run_open_loop(list(reqs), order="edf")
+    dev = rep.devices["opengemm:0"]
+    assert dev.preemptions == 1
+    assert dev.preempted_config_cycles > 0.0
+    # the victim re-entered placement: every request retired exactly once
+    assert dev.launches == len(reqs)
+    assert len(rep.launch_log()) == len(reqs)
+    by_tenant = {r.tenant for r in rep.launch_log()}
+    assert by_tenant == {"bulk0", "bulk1", "bulk2", "vip"}
+    # deadline accounting saw all four deadline-carrying launches
+    assert rep.deadline_launches() == len(reqs)
+
+
 def test_edf_lowers_deadline_misses_under_bursty_traffic():
     """The ISSUE's satellite acceptance: on a bursty open-loop stream with
     mixed slack classes, EDF admission strictly lowers deadline misses vs.
@@ -472,3 +533,55 @@ def test_cached_dispatch_never_sends_more_bytes(reqs, max_contexts, depth):
         return s.run(list(reqs)).bytes_sent
 
     assert bytes_sent(True) <= bytes_sent(False)
+
+
+# ------------------------------- property: the cache never invents warmth
+
+
+@st.composite
+def descriptor_sequences(draw):
+    """Random multi-tenant descriptor streams: few tenants, few field
+    names, tiny value domains — maximal collision pressure on the
+    context-LRU and the per-field comparison."""
+    seq = []
+    for _ in range(draw(st.integers(1, 30))):
+        tenant = f"t{draw(st.integers(0, 3))}"
+        fields = {
+            f"r{j}": draw(st.integers(0, 2))
+            for j in range(draw(st.integers(1, 5)))
+        }
+        seq.append((tenant, fields))
+    return seq
+
+
+@settings(max_examples=60, deadline=None)
+@given(descriptor_sequences(), st.integers(1, 3))
+def test_elided_bytes_never_exceed_previously_sent(seq, max_contexts):
+    """ISSUE 4 satellite: device-resident state is only ever state the
+    host actually wrote — no dispatch may report more elided bytes than
+    this tenant has cumulatively sent before it (the cache cannot invent
+    warmth, across any interleaving or eviction pattern)."""
+    cache = ConfigStateCache(max_contexts=max_contexts)
+    sent_before: dict[str, int] = {}
+    for tenant, fields in seq:
+        plan = cache.dispatch(tenant, fields)
+        assert plan.bytes_elided <= sent_before.get(tenant, 0), (
+            tenant, plan, sent_before)
+        sent_before[tenant] = sent_before.get(tenant, 0) + plan.bytes_sent
+
+
+@settings(max_examples=60, deadline=None)
+@given(descriptor_sequences(), st.integers(1, 2))
+def test_eviction_always_forces_full_resend(seq, max_contexts):
+    """ISSUE 4 satellite: a tenant whose context is not resident (first
+    dispatch, or LRU-evicted since its last) always pays a full re-send —
+    zero elision, every field on the wire — and is resident afterwards."""
+    cache = ConfigStateCache(max_contexts=max_contexts)
+    for tenant, fields in seq:
+        resident = tenant in cache.tenants()
+        plan = cache.dispatch(tenant, fields)
+        assert plan.context_hit == resident
+        if not resident:
+            assert plan.bytes_elided == 0
+            assert set(plan.sent) == set(fields)
+        assert tenant in cache.tenants()  # dispatch installs the context
