@@ -1,0 +1,226 @@
+"""Engine benchmark: runtime config overlap — serialized vs. double-buffered.
+
+Sweeps **compute intensity × link class × overlap mode** on a single
+concurrent-configuration (OpenGeMM-like) device behind each fabric:
+
+* *Compute intensity* scales the macro-op (GEMM dims) while the launch's
+  write plan stays descriptor-heavy (48 advancing register fields), moving
+  the workload from configuration-bound (tiny tiles: the wire dominates)
+  through the balanced ridge to compute-bound (large tiles: the datapath
+  dominates and the staging ring already hides config).
+* *Link class* prices the wire: the core-local CSR port has nothing to
+  hide (overlapped ≡ serialized, bit-exactly); NoC and PCIe carry real
+  burst-DMA time that the overlapped engine streams behind compute.
+
+Per cell the serialized engine keeps the host captive for its transfers'
+wire time (T_set fully exposed, Eq. 4's worst case), while the overlapped
+engine releases the host at descriptor enqueue and double-buffers the DMA
+behind the previous launch's compute — the §5.5 compiler pass replayed at
+dispatch time. The sweep shows the characteristic shape: the win peaks
+where wire time and compute time are comparable (neither resource can hide
+inside the other under serialization) and tapers at both ends.
+
+Also reported per cell: exposed vs. hidden config cycles and the
+overlap-adjusted roofline point (BW_cfg over *exposed* T_set only — the
+ridge shifts left as config hides). A contention section prices the shared
+cluster LinkPort (two hosts behind one PCIe switch vs. private wires).
+
+Acceptance (asserted below, ISSUE 5):
+* overlapped makespan ≤ serialized makespan in **every** cell (the CI gate
+  re-checks this from the JSON);
+* geomean makespan reduction > 1x over the NoC and PCIe cells;
+* CSR cells identical across modes (nothing to hide, bit-exact);
+* per-resource busy cycles conserved between modes in every cell;
+* the overlap-adjusted roofline's BW_cfg ≥ the serialized one wherever
+  cycles hid.
+
+Emits ``BENCH_config_overlap.json`` (with a ``geomean`` summary).
+
+Usage: ``PYTHONPATH=src python benchmarks/config_overlap.py [--smoke] [--out F]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.cluster import Cluster
+from repro.sched import LaunchRequest, Scheduler, geomean
+
+N_FIELDS = 48  # advancing register fields per launch (descriptor-heavy)
+INTENSITIES = {  # label -> GEMM dims; ops = 2*M*K*N on a 1024 ops/cycle datapath
+    "tiny": (8, 8, 8),
+    "low": (16, 16, 16),
+    "mid": (24, 24, 24),
+    "high": (32, 32, 32),
+    "huge": (64, 64, 64),
+}
+LINKS = ("csr", "noc", "pcie")
+MODES = ("serialized", "overlapped")
+
+
+def stream(dims, n: int) -> list[LaunchRequest]:
+    return [
+        LaunchRequest("t0", dims, {f"p{j}": 64 * i + j for j in range(N_FIELDS)})
+        for i in range(n)
+    ]
+
+
+def run_cell(link: str, dims, mode: str, n: int) -> dict:
+    s = Scheduler.from_registry({"opengemm": 1}, link=link, overlap=mode)
+    rep = s.run(stream(dims, n))
+    host = rep.resources["host"]
+    wire = next(t for t in rep.resources.values() if t.kind == "wire")
+    compute = next(t for t in rep.resources.values() if t.kind == "compute")
+    point = None
+    for dev in rep.devices.values():
+        from repro.core.roofline import overlap_roofline_point
+
+        point = overlap_roofline_point(
+            f"{link}/{mode}",
+            total_ops=dev.total_ops,
+            config_bytes=max(dev.bytes_sent, 1),
+            exposed_cycles=dev.exposed_config_cycles,
+            makespan=rep.makespan,
+            p_peak=dev.model.p_peak,
+        )
+    return {
+        "makespan": rep.makespan,
+        "config_cycles": rep.config_cycles,
+        "exposed_config_cycles": rep.exposed_config_cycles,
+        "hidden_config_cycles": rep.hidden_config_cycles,
+        "hidden_fraction": rep.overlap_summary()["hidden_fraction"],
+        "host_busy": host.busy_cycles,
+        "wire_busy": wire.busy_cycles,
+        "compute_busy": compute.busy_cycles,
+        "bytes_sent": rep.bytes_sent,
+        "bw_config_exposed": point.bw_config,
+        "ridge_i_oc": point.p_peak / point.bw_config,
+    }
+
+
+def sweep(n: int, intensities) -> list[dict]:
+    cells = []
+    for link in LINKS:
+        for label in intensities:
+            dims = INTENSITIES[label]
+            by_mode = {mode: run_cell(link, dims, mode, n) for mode in MODES}
+            ser, ov = by_mode["serialized"], by_mode["overlapped"]
+            cells.append({
+                "link": link,
+                "intensity": label,
+                "dims": list(dims),
+                "serialized": ser,
+                "overlapped": ov,
+                "speedup": ser["makespan"] / ov["makespan"],
+            })
+    return cells
+
+
+def contention(n: int) -> dict:
+    """Two hosts behind one shared PCIe switch vs. private wires: the
+    shared port serializes both hosts' transfers on one resource, so
+    completion can only move later — never earlier."""
+    reqs = [LaunchRequest(f"t{i % 2}", (16, 16, 16),
+                          {f"p{j}": 64 * i + j for j in range(N_FIELDS)},
+                          arrival_time=float(5 * i)) for i in range(n)]
+
+    def makespan(shared: bool) -> float:
+        cl = Cluster.uniform(2, {"opengemm": 1}, policy="round_robin",
+                             link="pcie", overlap="overlapped",
+                             shared_port=shared)
+        return cl.run(list(reqs)).makespan
+
+    private, shared = makespan(False), makespan(True)
+    return {"private_makespan": private, "shared_makespan": shared,
+            "contention_slowdown": shared / private}
+
+
+def run(smoke: bool = False) -> dict:
+    n = 8 if smoke else 24
+    intensities = ("low", "mid", "huge") if smoke else tuple(INTENSITIES)
+    cells = sweep(n, intensities)
+    fabric = [c for c in cells if c["link"] != "csr"]
+    summary = {
+        "serialized_over_overlapped_makespan": geomean(
+            [c["speedup"] for c in fabric]),
+        "noc_speedup": geomean(
+            [c["speedup"] for c in fabric if c["link"] == "noc"]),
+        "pcie_speedup": geomean(
+            [c["speedup"] for c in fabric if c["link"] == "pcie"]),
+        "hidden_fraction": geomean(
+            [c["overlapped"]["hidden_fraction"] for c in fabric]),
+        "bw_config_gain_exposed": geomean(
+            [c["overlapped"]["bw_config_exposed"]
+             / c["serialized"]["bw_config_exposed"] for c in fabric]),
+    }
+    return {
+        "benchmark": "config_overlap",
+        "smoke": smoke,
+        "n_launches": n,
+        "n_fields": N_FIELDS,
+        "cells": cells,
+        "contention": contention(n),
+        "geomean": summary,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer launches / intensities (CI time budget)")
+    ap.add_argument("--out", default="BENCH_config_overlap.json")
+    args = ap.parse_args()
+
+    result = run(smoke=args.smoke)
+
+    print("# runtime config overlap: serialized vs double-buffered makespan")
+    print("link,intensity,serialized,overlapped,speedup,hidden/config")
+    for c in result["cells"]:
+        ov = c["overlapped"]
+        print(f"{c['link']},{c['intensity']},{c['serialized']['makespan']:.1f},"
+              f"{ov['makespan']:.1f},{c['speedup']:.2f}x,"
+              f"{ov['hidden_config_cycles']:.0f}/{ov['config_cycles']:.0f}")
+
+    ct = result["contention"]
+    print(f"\n# shared PCIe switch (2 hosts): private {ct['private_makespan']:.1f}"
+          f" vs shared {ct['shared_makespan']:.1f}"
+          f" ({ct['contention_slowdown']:.2f}x slower — contention priced)")
+
+    g = result["geomean"]
+    print(f"\ngeomean: serialized/overlapped makespan "
+          f"{g['serialized_over_overlapped_makespan']:.2f}x "
+          f"(noc {g['noc_speedup']:.2f}x, pcie {g['pcie_speedup']:.2f}x), "
+          f"exposed-BW_cfg gain {g['bw_config_gain_exposed']:.2f}x")
+
+    out = Path(args.out)
+    out.write_text(json.dumps(result, indent=2, sort_keys=True))
+    print(f"wrote {out}")
+
+    # acceptance (ISSUE 5): overlap never regresses, strictly wins on fabric
+    for c in result["cells"]:
+        ser, ov = c["serialized"], c["overlapped"]
+        assert ov["makespan"] <= ser["makespan"], c
+        # conservation: only placement moves — total work per resource fixed
+        for key in ("host_busy", "wire_busy", "compute_busy", "bytes_sent",
+                    "config_cycles"):
+            assert abs(ov[key] - ser[key]) < 1e-6, (key, c)
+        if c["link"] == "csr":
+            # nothing to hide on a core-local port: bit-identical
+            assert ov["makespan"] == ser["makespan"], c
+            assert ov["hidden_config_cycles"] == 0.0, c
+        else:
+            # the overlap-adjusted roofline reflects only exposed T_set
+            assert ov["exposed_config_cycles"] < ov["config_cycles"], c
+            assert ov["bw_config_exposed"] > ser["bw_config_exposed"], c
+            assert ov["ridge_i_oc"] < ser["ridge_i_oc"], c
+    assert result["geomean"]["serialized_over_overlapped_makespan"] > 1.0
+    assert result["geomean"]["noc_speedup"] > 1.0
+    assert result["geomean"]["pcie_speedup"] > 1.0
+    # shared-port contention is real and never negative
+    assert result["contention"]["contention_slowdown"] >= 1.0
+
+
+if __name__ == "__main__":
+    main()

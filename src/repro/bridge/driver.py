@@ -22,6 +22,15 @@ On a tenant's first dispatch the chosen host adopts its slot context
 (``Host.adopt_context``): under a sticky router every later launch of
 that tenant is bound to this home (KV-cache residency), while non-sticky
 baselines (round-robin) keep shuffling it — the A/B the benchmark runs.
+
+Runtime config overlap (``repro.engine``) threads straight through this
+loop: on an ``overlap="overlapped"`` cluster each descriptor's burst DMA
+streams behind the previous launch's compute, so the launch retires
+earlier, the feedback edge (``rec.end``) moves earlier, and the tenant's
+next step is released sooner — hidden T_set lands directly on
+``tokens_per_kcycle``, which no open-loop replay can show. Each
+:class:`StepRecord` carries the step's exposed-vs-hidden config cycles so
+the bridge report can say how much of the win was overlap.
 """
 
 from __future__ import annotations
@@ -47,11 +56,19 @@ class StepRecord:
     launches: int  # launches the step issued (prefill chains > 1)
     bytes_sent: int  # config bytes that crossed the boundary
     bytes_elided: int  # config bytes resident state kept off the wire
+    config_cycles: float = 0.0  # T_set of the step's descriptors
+    exposed_config: float = 0.0  # ... the part the engine failed to hide
 
     @property
     def latency(self) -> float:
         """Step latency — what a decode-latency SLO is written against."""
         return self.completion - self.arrival
+
+    @property
+    def hidden_config(self) -> float:
+        """Descriptor config cycles the overlapped engine streamed behind
+        compute — cycles that no longer delay this tenant's next token."""
+        return self.config_cycles - self.exposed_config
 
 
 class ClosedLoopDriver:
@@ -111,11 +128,14 @@ class ClosedLoopDriver:
                 continue
             t = now
             sent = elided = 0
+            cfg = exposed = 0.0
             for desc in descs:
                 rec = self._dispatch(te, desc, t)
                 t = rec.end
                 sent += rec.bytes_sent
                 elided += rec.bytes_elided
+                cfg += rec.config_cycles
+                exposed += rec.exposed_config
             self.steps.append(StepRecord(
                 tenant=name,
                 step=te.steps,
@@ -125,6 +145,8 @@ class ClosedLoopDriver:
                 launches=len(descs),
                 bytes_sent=sent,
                 bytes_elided=elided,
+                config_cycles=cfg,
+                exposed_config=exposed,
             ))
             heapq.heappush(ready, (t, name))
         for te in self.tenants.values():

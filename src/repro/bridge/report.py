@@ -72,6 +72,19 @@ class BridgeReport:
         return [(s.arrival, s.bytes_sent, s.bytes_elided)
                 for s in self.steps if s.tenant == tenant]
 
+    def overlap_summary(self) -> dict[str, float]:
+        """How much of the run's descriptor T_set the engine hid behind
+        compute (0.0 everywhere on a serialized cluster) — the bridge-level
+        view of the §5.5 runtime win that shortened every feedback edge."""
+        cfg = sum(s.config_cycles for s in self.steps)
+        hidden = sum(s.hidden_config for s in self.steps)
+        return {
+            "config_cycles": cfg,
+            "exposed_config_cycles": cfg - hidden,
+            "hidden_config_cycles": hidden,
+            "hidden_fraction": hidden / cfg if cfg else 0.0,
+        }
+
     def tenant_bytes(self, tenant: str) -> dict[str, float]:
         """Cluster-side config bytes for one tenant, summed over hosts."""
         recs = [r for r in self.cluster.records if r.tenant == tenant]

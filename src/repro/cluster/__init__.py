@@ -22,6 +22,10 @@ open-loop traffic, tail-latency SLOs — the regime where the ROADMAP's
   (p50/p95/p99), SLO attainment and goodput, exported as ``interp.Trace``
   timelines and per-host configuration-roofline points so cluster runs plot
   beside compiled programs.
+* :mod:`~repro.cluster.shed` — the migration *trigger*: a host whose
+  ``port_wait_estimate`` stays above k× the cluster median sheds its
+  hottest tenant through ``fabric.migrate``'s planner (which prices warm
+  hand-off vs. cold resend and executes the cheaper).
 
 The full runtime stack is now ``compile → dispatch → schedule → route →
 transport``: hosts name the fabric link their config port crosses
@@ -29,9 +33,10 @@ transport``: hosts name the fabric link their config port crosses
 congestion and residency.
 """
 
-from . import host, router, slo, traffic
+from . import host, router, shed, slo, traffic
 from .host import Host
 from .router import ROUTERS, Cluster, Router
+from .shed import ShedDecision, ShedTrigger
 from .slo import ClusterReport, TenantSLO, TenantServing, build_report, percentile
 from .traffic import ARRIVALS, TenantProfile, generate, slo_targets
 
@@ -42,6 +47,8 @@ __all__ = [
     "Host",
     "ROUTERS",
     "Router",
+    "ShedDecision",
+    "ShedTrigger",
     "TenantProfile",
     "TenantSLO",
     "TenantServing",
@@ -50,6 +57,7 @@ __all__ = [
     "host",
     "percentile",
     "router",
+    "shed",
     "slo",
     "slo_targets",
     "traffic",

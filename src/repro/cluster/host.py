@@ -13,7 +13,11 @@ resource cross-host routing must keep un-congested.
 With `repro.fabric` the port is no longer core-local: each host names the
 interconnect its config writes cross (CSR / NoC / PCIe), the scheduler
 prices every write's T_set through it, and the wire's occupancy is logged
-on the host's :class:`~repro.fabric.link.LinkPort`.
+on the host's :class:`~repro.fabric.link.LinkPort`. With `repro.engine`
+the port splits into its real resources — control thread, wire, compute —
+so ``overlap="overlapped"`` hosts release the control thread at descriptor
+enqueue and stream config behind compute, and ``port=`` lets several hosts
+share one cluster-level LinkPort (PCIe-switch contention).
 
 What the router reads off a host:
 
@@ -37,8 +41,13 @@ What the router reads off a host:
 from __future__ import annotations
 
 from ..core.accelerators import REGISTRY, AcceleratorModel
-from ..core.roofline import RooflinePoint, fabric_roofline_point, host_roofline_point
-from ..fabric.link import LinkModel
+from ..core.roofline import (
+    RooflinePoint,
+    fabric_roofline_point,
+    host_roofline_point,
+    overlap_roofline_point,
+)
+from ..fabric.link import LinkModel, LinkPort
 from ..sched.scheduler import Device, LaunchRequest, Scheduler
 from ..sched.telemetry import SchedulerReport
 
@@ -62,11 +71,15 @@ class Host:
         policy: str = "affinity",
         cache_enabled: bool = True,
         link: LinkModel | str | None = None,
+        overlap: str = "serialized",
+        staging_buffers: int = 2,
+        port: LinkPort | None = None,
     ):
         self.id = host_id
         self.sched = Scheduler(pool, depth=depth, max_contexts=max_contexts,
                                policy=policy, cache_enabled=cache_enabled,
-                               link=link)
+                               link=link, overlap=overlap,
+                               staging_buffers=staging_buffers, port=port)
         # tenants whose *slot context* (a hosted engine shard's KV cache)
         # lives on this host — the binding residency the sticky router
         # consults; distinct from register-cache warmth, which is advisory
@@ -149,20 +162,19 @@ class Host:
         (:meth:`probe_cost`) and the SLO report (``cluster.slo``), so the
         two can never drift apart.
 
-        The two terms combine by ``max()``, never by ``+``: the host is
-        conservatively captive for the wire time of its own config
-        transfers, so the in-flight transfer is already inside the host
-        clock — summing would double-count it. The wire interval is
-        half-open ``[start, end)``: a transfer that completes at exactly
-        ``now`` holds the port for zero further cycles (the off-by-one a
-        closed interval would introduce at the boundary). The wire term
-        only bites once DMA/host overlap (ROADMAP) lets transfers outrun
-        the control thread. ``req`` is reserved for request-dependent
-        waits (per-tenant port quotas) — currently every request sees the
-        same wait."""
-        wire_end = self.sched.port.busy_until
-        wire_wait = wire_end - now if wire_end > now else 0.0
-        return max(0.0, self.sched.host - now, wire_wait)
+        Since the engine refactor this is a *query against the resource
+        intervals* (:meth:`~repro.engine.resources.EngineResources.port_wait`),
+        not a bespoke formula: the max-combine (never ``+`` — a captive
+        host already contains its own transfer, summing would double-count
+        it) and the half-open ``[start, end)`` boundary (a transfer
+        completing at exactly ``now`` holds the port for zero further
+        cycles) both live in ``Resource.backlog``. Under DMA/host overlap
+        the wire can outrun the control thread, and with a shared cluster
+        LinkPort it carries other hosts' transfers too — both show up here
+        automatically because the wire resource is the port's. ``req`` is
+        reserved for request-dependent waits (per-tenant port quotas) —
+        currently every request sees the same wait."""
+        return self.sched.res.port_wait(now)
 
     def port_backlog(self, now: float) -> float:
         """Cycles of config work already committed past the wall clock —
@@ -201,6 +213,15 @@ class Host:
         return max((b / dev.model.bw_config
                     for dev, b in self._elidable_per_device(req)), default=0.0)
 
+    def last_request(self, tenant: str) -> LaunchRequest | None:
+        """The tenant's most recent launch here — what a migration trigger
+        prices a shed with (``cluster.shed``)."""
+        return self.sched.last_request(tenant)
+
+    def tenant_launches(self) -> dict[str, int]:
+        """tenant → launches dispatched on this host (shed heat signal)."""
+        return self.sched.tenant_launches()
+
     # -- dispatch ------------------------------------------------------------
 
     def dispatch(self, req: LaunchRequest) -> Device:
@@ -231,6 +252,22 @@ class Host:
             total_ops=total_ops,
             config_bytes=max(config_bytes, 1),
             config_cycles=config_cycles,
+            makespan=makespan,
+            p_peak=sum(d.model.p_peak for d in devs),
+        )
+
+    def overlap_roofline_point(self, makespan: float) -> RooflinePoint:
+        """This host with *runtime overlap* priced in: the effective T_set
+        of Eq. 4 counts only the **exposed** config cycles (host
+        instruction time + wire time compute failed to hide), so BW_cfg
+        rises and the ridge shifts left. On a serialized host exposed ==
+        total and the point coincides with :meth:`roofline_point`."""
+        devs = self.sched.devices
+        return overlap_roofline_point(
+            f"{self.id}[{self.sched.overlap.mode}]",
+            total_ops=sum(d.telemetry.total_ops for d in devs),
+            config_bytes=max(sum(d.telemetry.bytes_sent for d in devs), 1),
+            exposed_cycles=sum(d.telemetry.exposed_config_cycles for d in devs),
             makespan=makespan,
             p_peak=sum(d.model.p_peak for d in devs),
         )

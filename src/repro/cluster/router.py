@@ -48,8 +48,11 @@ from __future__ import annotations
 import itertools
 import random
 import zlib
+from collections import Counter
 from typing import Iterable, Mapping, Sequence
 
+from ..fabric.link import LinkPort, resolve_link
+from ..sched.queue import ADMISSION_MODES, AdmissionQueue
 from ..sched.scheduler import LaunchRequest, arrival_order
 from .host import Host
 from .slo import ClusterReport, build_report
@@ -154,16 +157,29 @@ class Cluster:
         seed: int = 0,
         link=None,
         sticky: bool = False,
+        overlap: str = "serialized",
+        shared_port: bool = False,
     ) -> "Cluster":
         """``Cluster.uniform(4, {"gemmini": 1, "opengemm": 1})`` — n
         identical hosts, each carrying one shard of the mixed pool.
         ``link`` names the fabric every host's config port crosses
         (default: the paper's core-local CSR); ``sticky`` turns on
-        slot-residency-aware routing (the serving bridge's decode path)."""
+        slot-residency-aware routing (the serving bridge's decode path);
+        ``overlap`` selects the engine's config-staging mode per host
+        (``"overlapped"`` hides async burst-DMA T_set behind compute);
+        ``shared_port=True`` puts every host behind **one** cluster-level
+        :class:`~repro.fabric.link.LinkPort` — the PCIe-switch topology,
+        where all hosts' config transfers contend FIFO on a single wire
+        instead of each owning a private one."""
+        port = None
+        if shared_port:
+            shared = resolve_link(link)
+            port = LinkPort(shared, name=f"cfg[{shared.name}]:shared")
         hosts = [
             Host.from_registry(f"h{i}", dict(counts), depth=depth,
                                max_contexts=max_contexts, policy=host_policy,
-                               cache_enabled=cache_enabled, link=link)
+                               cache_enabled=cache_enabled, link=link,
+                               overlap=overlap, port=port)
             for i in range(n_hosts)
         ]
         return cls(hosts, policy=policy, seed=seed, sticky=sticky)
@@ -178,10 +194,42 @@ class Cluster:
         requests: Iterable[LaunchRequest],
         *,
         slo: Mapping[str, float] | None = None,
+        order: str = "arrival",
     ) -> ClusterReport:
-        """Event-driven drain: route and dispatch in arrival order, then
+        """Event-driven drain: route and dispatch in admission order, then
         fold every host's scheduler report into one cluster report (``slo``
-        maps tenant → latency target in cycles, cf. ``traffic.slo_targets``)."""
-        for req in sorted(requests, key=arrival_order):
+        maps tenant → latency target in cycles, cf. ``traffic.slo_targets``).
+
+        ``order="arrival"`` admits in arrival order (ties to higher
+        priority) — the classic drain. ``order="edf"`` makes cross-host
+        admission deadline-aware: the router's backlog is everything that
+        has arrived by the time the *earliest-free eligible host control
+        thread* could take new work (``min`` over the clocks of hosts that
+        can serve some still-queued device kind — a host whose kind
+        receives no traffic must not pin the admission clock at zero and
+        silently degrade EDF to arrival order; with one host this
+        degenerates exactly to ``Scheduler.run_open_loop(order="edf")``),
+        and the tightest deadline in that backlog is admitted first, so a
+        burst's tight-deadline launches overtake loose ones cluster-wide
+        instead of only inside whichever host they landed on. Eligibility
+        is by device kind, not routing policy: a sticky tenant's home may
+        be busier than the admission clock suggests — stickiness binds
+        *placement*, while admission models the earliest capable port."""
+        assert order in ADMISSION_MODES, order
+        if order == "arrival":
+            for req in sorted(requests, key=arrival_order):
+                self.dispatch(req)
+            return build_report(self.hosts, slo=slo)
+        pending = list(requests)
+        kinds = Counter(req.accel for req in pending)
+        queue = AdmissionQueue(pending, mode=order)
+        while len(queue):
+            eligible = [h for h in self.hosts
+                        if None in kinds or not kinds.keys().isdisjoint(h.kinds())]
+            now = min(h.clock for h in eligible) if eligible else 0.0
+            req = queue.pop(now)
+            kinds[req.accel] -= 1
+            if not kinds[req.accel]:
+                del kinds[req.accel]
             self.dispatch(req)
         return build_report(self.hosts, slo=slo)

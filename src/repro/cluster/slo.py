@@ -29,7 +29,12 @@ from typing import Mapping, Sequence
 from ..core.interp import Trace
 from ..core.roofline import RooflinePoint
 from ..sched.state_cache import elision_ratio
-from ..sched.telemetry import LaunchRecord, LinkTelemetry, SchedulerReport
+from ..sched.telemetry import (
+    LaunchRecord,
+    LinkTelemetry,
+    ResourceTelemetry,
+    SchedulerReport,
+)
 
 
 def percentile(values: Sequence[float], q: float) -> float:
@@ -136,6 +141,9 @@ class ClusterReport:
     # routing can never disagree about backlog
     port_wait: dict[str, float]
     fabric_roofline: list[RooflinePoint]  # one point per host (link-effective BW)
+    # one point per host with runtime overlap priced in: BW_cfg over the
+    # *exposed* config cycles only (== `roofline` on serialized hosts)
+    overlap_roofline: list[RooflinePoint] = field(default_factory=list)
     # tenant -> token-level serving stats, attached by the closed-loop
     # bridge (empty for plain open-loop runs)
     serving: dict[str, TenantServing] = field(default_factory=dict)
@@ -197,12 +205,37 @@ class ClusterReport:
 
     def links(self) -> dict[str, LinkTelemetry]:
         """Per-host fabric config-port telemetry (busy/occupancy timelines),
-        keyed ``host/port`` so merged cluster views stay unambiguous."""
+        keyed ``host/port`` so merged cluster views stay unambiguous. Hosts
+        behind one shared cluster LinkPort each report the same underlying
+        wire (the key's port name carries the ``:shared`` suffix)."""
         return {
             f"{host_id}/{name}": tel
             for host_id, rep in self.hosts.items()
             for name, tel in rep.links.items()
         }
+
+    def resources(self) -> dict[str, ResourceTelemetry]:
+        """Per-host engine-resource telemetry (host control thread, config
+        wire, per-device compute busy timelines), keyed ``host/resource``."""
+        return {
+            f"{host_id}/{name}": tel
+            for host_id, rep in self.hosts.items()
+            for name, tel in rep.resources.items()
+        }
+
+    @property
+    def config_cycles(self) -> float:
+        return sum(rep.config_cycles for rep in self.hosts.values())
+
+    @property
+    def exposed_config_cycles(self) -> float:
+        """Config cycles the cluster's hosts actually saw (T_set minus
+        what the overlapped engines streamed behind compute)."""
+        return sum(rep.exposed_config_cycles for rep in self.hosts.values())
+
+    @property
+    def hidden_config_cycles(self) -> float:
+        return self.config_cycles - self.exposed_config_cycles
 
     # -- tails ---------------------------------------------------------------
 
@@ -277,4 +310,5 @@ def build_report(hosts, *, slo: Mapping[str, float] | None = None) -> ClusterRep
         roofline=[h.roofline_point(makespan) for h in hosts],
         port_wait={h.id: h.port_wait_estimate(now=last_arrival) for h in hosts},
         fabric_roofline=[h.fabric_roofline_point(makespan) for h in hosts],
+        overlap_roofline=[h.overlap_roofline_point(makespan) for h in hosts],
     )

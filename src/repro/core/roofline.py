@@ -149,6 +149,39 @@ def fabric_roofline_point(
     )
 
 
+def overlap_roofline_point(
+    name: str,
+    *,
+    total_ops: float,
+    config_bytes: float,
+    exposed_cycles: float,
+    makespan: float,
+    p_peak: float,
+    calc_cycles: float = 0.0,
+) -> RooflinePoint:
+    """Configuration-roofline placement with *runtime overlap* priced in.
+
+    When the engine stages config transfers behind compute
+    (``repro.engine.overlap``), part of T_set leaves the critical path: the
+    effective configuration term of Eq. 4 is only the **exposed** config
+    cycles — host instruction time plus whatever wire time compute failed
+    to cover. ``BW_cfg`` rises accordingly and the ridge (knee) point
+    ``P_peak / BW_cfg`` shifts left: workloads that were configuration-bound
+    under serialized dispatch become compute-bound once their T_set hides.
+    A serialized run has ``exposed == config_cycles`` and this point
+    degenerates to :func:`host_roofline_point`.
+    """
+    t_set = max(exposed_cycles, 1e-12)
+    bw = effective_config_bandwidth(config_bytes, calc_cycles, t_set)
+    return RooflinePoint(
+        name=name,
+        i_oc=total_ops / max(config_bytes, 1e-12),
+        performance=total_ops / makespan if makespan else 0.0,
+        p_peak=p_peak,
+        bw_config=bw,
+    )
+
+
 def decode_roofline_point(
     name: str,
     *,

@@ -1,0 +1,47 @@
+"""repro.engine — explicit three-resource occupancy + runtime config overlap.
+
+The configuration wall has three walls, not one: a launch's setup occupies
+the **host** control thread (parameter calculation + issue), the **wire**
+(the config DMA / interconnect path), and gates the accelerator's
+**compute**. The layers below used to account all three on one implicit
+timeline — the scheduler's scalar host clock — which made the host
+conservatively captive for the wire time of its own transfers and left the
+§5.5 overlap win compile-time-only.
+
+* :mod:`~repro.engine.resources` — :class:`Resource` (FIFO reservations
+  over a busy-interval log, pure ``when``/``backlog``/``overlap_with``
+  queries) and :class:`EngineResources` (the host/wire/compute triple one
+  scheduler dispatches onto, including the single ``port_wait`` query the
+  router and SLO report share).
+* :mod:`~repro.engine.overlap` — :class:`OverlapPolicy`: serialized
+  (pre-engine behavior, bit-exact) vs. overlapped (double-buffered async
+  burst-DMA staging that releases the host at descriptor enqueue and hides
+  the wire behind compute — the runtime twin of ``core.passes.overlap``).
+
+``sched`` reserves through this layer, ``fabric.LinkPort`` exposes the wire
+as a :class:`Resource`, and ``cluster``/``bridge`` read the per-resource
+timelines back out as telemetry.
+"""
+
+from . import overlap, resources
+from .overlap import OVERLAP_MODES, OverlapPolicy, StagePlan
+from .resources import (
+    EngineResources,
+    Interval,
+    Resource,
+    merge_intervals,
+    overlap_cycles,
+)
+
+__all__ = [
+    "EngineResources",
+    "Interval",
+    "OVERLAP_MODES",
+    "OverlapPolicy",
+    "Resource",
+    "StagePlan",
+    "merge_intervals",
+    "overlap",
+    "overlap_cycles",
+    "resources",
+]

@@ -39,7 +39,9 @@ the wire until it completes), and logs every transfer so
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
+from ..engine.resources import Resource
 
 
 @dataclass(frozen=True)
@@ -135,27 +137,39 @@ class Transfer:
 
 class LinkPort:
     """One shared link instance: concurrent tenants' transfers serialize
-    FIFO on the wire, and every occupancy is logged for telemetry."""
+    FIFO on the wire, and every occupancy is logged for telemetry.
+
+    The wire is a reservable engine resource (:class:`~repro.engine.resources.Resource`,
+    exposed as :attr:`res`): ``sched.Scheduler`` folds it into its
+    :class:`~repro.engine.resources.EngineResources` so host, wire, and
+    compute occupancy live in one vocabulary. One ``LinkPort`` may be
+    shared by *several* hosts (a cluster-level PCIe switch): every
+    sharer's config transfers then contend on the same FIFO timeline —
+    ``cluster.Cluster.uniform(shared_port=True)`` builds that topology."""
 
     def __init__(self, link: LinkModel, name: str = "link"):
         self.link = link
         self.name = name
-        self.busy_until = 0.0
+        self.res = Resource(name, kind="wire")
         self.log: list[Transfer] = []
+
+    @property
+    def busy_until(self) -> float:
+        """The wire's committed time (the resource's clock)."""
+        return self.res.free
 
     def backlog(self, now: float) -> float:
         """Cycles the wire is already committed beyond ``now``."""
-        return max(0.0, self.busy_until - now)
+        return self.res.backlog(now)
 
     def acquire(self, now: float, cycles: float, *, nbytes: int = 0,
                 tag: str = "", mode: str = "mmio") -> Transfer:
         """Occupy the link for ``cycles`` starting no earlier than ``now``
         (a busy wire pushes the transfer back — bandwidth sharing as FIFO
         serialization). Returns the resolved transfer."""
-        start = max(now, self.busy_until)
-        xfer = Transfer(start=start, end=start + cycles, nbytes=int(nbytes),
+        iv = self.res.reserve(now, cycles, tag=tag)
+        xfer = Transfer(start=iv.start, end=iv.end, nbytes=int(nbytes),
                         tag=tag, mode=mode)
-        self.busy_until = xfer.end
         self.log.append(xfer)
         return xfer
 

@@ -39,6 +39,7 @@ from .telemetry import (
     DeviceTelemetry,
     LaunchRecord,
     LinkTelemetry,
+    ResourceTelemetry,
     SchedulerReport,
     geomean,
 )
@@ -54,6 +55,7 @@ __all__ = [
     "LaunchRequest",
     "LaunchTiming",
     "LinkTelemetry",
+    "ResourceTelemetry",
     "Scheduler",
     "SchedulerReport",
     "Staged",

@@ -43,6 +43,7 @@ from dataclasses import dataclass
 from typing import Any, Iterable
 
 from ..core.accelerators import AcceleratorModel
+from ..engine.resources import Resource
 
 ADMISSION_MODES = ("arrival", "edf")
 
@@ -123,14 +124,27 @@ class Staged:
 
 
 class LaunchQueue:
-    """Launch staging for one device instance."""
+    """Launch staging for one device instance.
 
-    def __init__(self, model: AcceleratorModel, depth: int = 2):
+    The device's compute datapath is an engine resource
+    (:class:`~repro.engine.resources.Resource`): every submitted macro-op
+    reserves a busy interval on it, so ``device_free`` is the resource's
+    clock and the scheduler's occupancy model (``EngineResources``) reads
+    compute timelines straight from here."""
+
+    def __init__(self, model: AcceleratorModel, depth: int = 2,
+                 name: str = ""):
         assert depth >= 1
         self.model = model
         self.depth = depth if model.concurrent else 1
-        self.device_free = 0.0
+        self.compute = Resource(f"compute[{name or model.name}]",
+                                kind="compute")
         self._inflight: deque[Staged] = deque()  # unretired invocations
+
+    @property
+    def device_free(self) -> float:
+        """Device time the datapath is committed through (resource clock)."""
+        return self.compute.free
 
     @property
     def outstanding(self) -> int:
@@ -170,9 +184,10 @@ class LaunchQueue:
         if victim.start <= host or victim.priority >= priority:
             return None
         self._inflight.pop()
+        self.compute.pop_last()  # the victim's macro-op never ran
         # the device is committed only through the previous entry now; if the
         # ring emptied, it runs no later than the victim would have started
-        self.device_free = (
+        self.compute.free = (
             self._inflight[-1].end if self._inflight else victim.start
         )
         return victim
@@ -182,21 +197,24 @@ class LaunchQueue:
             self._inflight.popleft()
 
     def submit(self, host: float, duration: float, *, priority: int = 0,
-               token: Any = None) -> LaunchTiming:
-        """Issue a launch at host time ``host`` (configuration already
-        written); returns the resolved timing and the new host clock."""
+               token: Any = None, ready: float = 0.0) -> LaunchTiming:
+        """Issue a launch at host time ``host``; returns the resolved timing
+        and the new host clock. ``ready`` is the config-complete edge: the
+        macro-op may not start before its register image is fully on-device
+        (an async overlapped transfer finishing after the host released —
+        0.0 for serialized configuration, where the host clock already
+        covers the transfer)."""
         t0 = host
         if self.model.concurrent:
             self._retire(host)
             # staging ring full: block until the oldest staged op frees a slot
             while len(self._inflight) >= self.depth:
                 host = max(host, self._inflight.popleft().end)
-            start = max(host, self.device_free)
-        else:
-            # sequential configuration: the host is captive until retirement
-            start = max(host, self.device_free)
-        end = start + duration
-        self.device_free = end
+        # sequential configuration keeps the host captive until retirement;
+        # either way the datapath reservation is FIFO on the compute resource
+        iv = self.compute.reserve(max(host, ready), duration,
+                                  tag=getattr(token, "tenant", ""))
+        start, end = iv.start, iv.end
         if self.model.concurrent:
             self._inflight.append(Staged(start, end, priority, token))
         else:

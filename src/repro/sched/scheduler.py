@@ -23,6 +23,17 @@ balance fall out of a single scalar.
 Timing uses the same cost model as ``core.interp`` (config-write cycles per
 field, launch cycles, sequential-stall vs. staged-concurrent launches), so
 scheduler telemetry is directly comparable with compiled-program traces.
+
+**Engine occupancy (repro.engine).** Since the engine refactor the
+scheduler no longer bumps a private scalar clock: every launch *reserves*
+the three contended resources — the host control thread, the config wire
+(the fabric :class:`~repro.fabric.link.LinkPort`'s resource, possibly
+shared by several hosts), and the device's compute datapath (owned by its
+:class:`~repro.sched.queue.LaunchQueue`). ``overlap="serialized"``
+reproduces the pre-engine cycle counts bit-exactly (the host stays captive
+for its transfers' wire time); ``overlap="overlapped"`` stages async
+burst-DMA transfers behind compute, releasing the host at descriptor
+enqueue — the runtime twin of the §5.5 compiler pass.
 """
 
 from __future__ import annotations
@@ -33,11 +44,18 @@ from typing import Iterable, Sequence
 
 from ..core.accelerators import REGISTRY, AcceleratorModel
 from ..core.interp import Trace
+from ..engine.overlap import OverlapPolicy
+from ..engine.resources import EngineResources, Resource
 from ..fabric.link import LinkModel, LinkPort, resolve_link
 from ..fabric.transport import plan_fields
 from .queue import AdmissionQueue, LaunchQueue, arrival_order
 from .state_cache import ConfigStateCache, WritePlan
-from .telemetry import DeviceTelemetry, LinkTelemetry, SchedulerReport
+from .telemetry import (
+    DeviceTelemetry,
+    LinkTelemetry,
+    ResourceTelemetry,
+    SchedulerReport,
+)
 
 POLICIES = ("affinity", "round_robin", "least_loaded")
 
@@ -84,7 +102,7 @@ class Device:
             max_contexts=max_contexts,
             bytes_of=lambda name, value: model.bytes_per_field,
         )
-        self.queue = LaunchQueue(model, depth=depth)
+        self.queue = LaunchQueue(model, depth=depth, name=dev_id)
         self.telemetry = DeviceTelemetry(device=dev_id, model=model)
 
     def config_cycles(self, n_fields: int) -> float:
@@ -109,6 +127,9 @@ class Scheduler:
         policy: str = "affinity",
         cache_enabled: bool = True,
         link: LinkModel | str | None = None,
+        overlap: str = "serialized",
+        staging_buffers: int = 2,
+        port: LinkPort | None = None,
     ):
         assert policy in POLICIES, policy
         if pool is None:
@@ -123,12 +144,43 @@ class Scheduler:
         # paper's core-local port (zero wire cost — the pre-fabric numbers
         # reproduce bit-exactly); "noc"/"pcie" price every write's T_set
         # through fabric.transport (MMIO vs. burst DMA, whichever is
-        # cheaper) and log occupancy on the shared config LinkPort
-        self.link = resolve_link(link)
-        self.port = LinkPort(self.link, name=f"cfg[{self.link.name}]")
-        self.host = 0.0
+        # cheaper) and log occupancy on the config LinkPort. Passing an
+        # existing ``port`` shares its wire with other schedulers (the
+        # cluster-level PCIe-switch topology): transfers from every sharer
+        # contend FIFO on one resource, and the port's link wins.
+        if port is not None:
+            self.port = port
+            self.link = port.link
+        else:
+            self.link = resolve_link(link)
+            self.port = LinkPort(self.link, name=f"cfg[{self.link.name}]")
+        # the three-resource occupancy model this scheduler dispatches onto
+        # (repro.engine): the host clock is the host resource's committed
+        # time, the wire is the port's resource, compute lives in the queues
+        self.res = EngineResources(
+            host=Resource("host", kind="host"),
+            wire=self.port.res,
+            compute={d.id: d.queue.compute for d in self.devices},
+        )
+        # serialized = pre-engine captive-host behavior (bit-exact);
+        # overlapped = double-buffered async burst-DMA staging (§5.5's
+        # runtime twin) — the host is released at descriptor enqueue
+        self.overlap = OverlapPolicy(mode=overlap, buffers=staging_buffers)
         self._rr = itertools.count()
         self._placements: dict[str, dict[str, int]] = {}
+        self._last_request: dict[str, LaunchRequest] = {}
+
+    @property
+    def host(self) -> float:
+        """The host control thread's committed time (the resource clock)."""
+        return self.res.host.free
+
+    @host.setter
+    def host(self, value: float) -> None:
+        # direct assignment (open-loop idling forward, probe save/restore)
+        # moves the clock without logging busy time — reservations in
+        # ``_dispatch_on`` are the only source of host busy intervals
+        self.res.host.free = value
 
     @classmethod
     def from_registry(cls, counts: dict[str, int], **kwargs) -> "Scheduler":
@@ -150,14 +202,18 @@ class Scheduler:
 
     def _probe_device(self, dev: Device, req: LaunchRequest) -> tuple[float, int]:
         """(host-visible cost of launching here now, config bytes a resident
-        context would elide) — one cache write-plan evaluation feeds both."""
+        context would elide) — one cache write-plan evaluation feeds both.
+        Under runtime overlap an async burst transfer exposes only the
+        host's instruction time to this scalar (the wire streams behind
+        compute), so warm overlapped devices probe even cheaper."""
         regs = req.regs_for(dev.model)
         if self.cache_enabled:
             plan = dev.cache.plan(req.tenant, regs)
             n_sent, elided = len(plan.sent), plan.bytes_elided
         else:
             n_sent, elided = len(regs), 0
-        cfg_c = plan_fields(n_sent, dev.model, self.link).t_set
+        xfer = plan_fields(n_sent, dev.model, self.link)
+        cfg_c = self.overlap.exposed_cost(dev.model.concurrent, xfer)
         issue = self.host + cfg_c
         if dev.model.concurrent:
             return cfg_c + dev.queue.admission_delay(issue), elided
@@ -224,6 +280,7 @@ class Scheduler:
                 if staged is not None and staged.token is not None:
                     victim = staged.token
                     dev.telemetry.record_preemption()
+                    self.overlap.preempted(dev.id)
                     self._placements[victim.tenant][dev.id] -= 1
         regs = req.regs_for(dev.model)
         if self.cache_enabled:
@@ -235,15 +292,26 @@ class Scheduler:
         issue = self.host
         xfer = plan_fields(len(plan.sent), dev.model, self.link)
         cfg_c = xfer.t_set
-        # the wire occupancy follows the host's descriptor/write issue;
-        # the serialized host clock means config transfers never overlap,
-        # but the port log still captures per-link busy/occupancy
-        self.port.acquire(issue + xfer.host_cycles, xfer.link_cycles,
-                          nbytes=xfer.nbytes, tag=req.tenant, mode=xfer.mode)
-        self.host += cfg_c
+        # reserve host + wire through the overlap policy: serialized keeps
+        # the host captive for the wire (bit-exact pre-engine behavior);
+        # overlapped enqueues an async burst DMA and releases the host at
+        # the descriptor — the wire then streams behind the device's compute
+        stage = self.overlap.stage(
+            dev_id=dev.id, concurrent=dev.model.concurrent, xfer=xfer,
+            host=self.res.host, port=self.port, issue=issue, tag=req.tenant)
+        # config cycles the host actually saw: its instruction time plus
+        # whatever wire time did NOT hide behind this device's compute —
+        # the "exposed T_set" the overlap-adjusted roofline is built from
+        hidden = (dev.queue.compute.overlap_with(stage.wire_start,
+                                                 stage.config_done)
+                  if stage.asynchronous else 0.0)
+        exposed = cfg_c - hidden
+        self.res.host.advance(stage.host_release)
         timing = dev.queue.submit(self.host, dev.model.macro_cycles(regs),
-                                  priority=req.priority, token=req)
+                                  priority=req.priority, token=req,
+                                  ready=stage.config_done)
         self.host = timing.host_after
+        self.overlap.committed(dev.id, timing.end)
         dev.telemetry.record_launch(
             tenant=req.tenant,
             regs=regs,
@@ -259,7 +327,10 @@ class Scheduler:
             issue=issue,
             priority=req.priority,
             deadline=req.deadline,
+            config_done=stage.config_done,
+            exposed_config=exposed,
         )
+        self._last_request[req.tenant] = req
         self._placements.setdefault(req.tenant, {})
         self._placements[req.tenant][dev.id] = (
             self._placements[req.tenant].get(dev.id, 0) + 1
@@ -273,6 +344,16 @@ class Scheduler:
         """Clobber cached device state (the runtime ``effects="all"``)."""
         for dev in self.devices:
             dev.cache.invalidate(tenant)
+
+    def last_request(self, tenant: str) -> LaunchRequest | None:
+        """The tenant's most recently dispatched request — the probe a
+        migration trigger (``cluster.shed``) prices a move with."""
+        return self._last_request.get(tenant)
+
+    def tenant_launches(self) -> dict[str, int]:
+        """tenant → launches dispatched here (the shed trigger's heat
+        signal for choosing which stream to move)."""
+        return {t: sum(devs.values()) for t, devs in self._placements.items()}
 
     # -- runs ----------------------------------------------------------------
 
@@ -306,6 +387,9 @@ class Scheduler:
             cache_stats={d.id: d.cache.stats for d in self.devices},
             placements={t: dict(p) for t, p in self._placements.items()},
             links={self.port.name: LinkTelemetry.from_port(self.port, makespan)},
+            resources={name: ResourceTelemetry.from_resource(res, makespan)
+                       for name, res in self.res.all().items()},
+            overlap_mode=self.overlap.mode,
         )
 
 

@@ -15,6 +15,7 @@ from dataclasses import dataclass, field
 from ..core.accelerators import AcceleratorModel
 from ..core.interp import Invocation, Trace
 from ..core.roofline import RooflinePoint
+from ..engine.resources import overlap_cycles
 from .state_cache import CacheStats, elision_ratio
 
 
@@ -51,6 +52,13 @@ class LaunchRecord:
     priority: int = 0
     deadline: float | None = None  # absolute EDF deadline (None = best effort)
     bytes_elided: int = 0  # config bytes the device already held (resident)
+    # engine overlap observables: when the register image was fully
+    # on-device (compute may never start earlier — the conservation
+    # invariant), and how much of T_set the host actually saw (serialized
+    # configuration exposes everything; an async burst DMA exposes only
+    # the host instruction time plus wire cycles compute failed to cover)
+    config_done: float = 0.0
+    exposed_config: float = 0.0
 
     @property
     def queue_delay(self) -> float:
@@ -69,6 +77,12 @@ class LaunchRecord:
         launches never miss)."""
         return self.deadline is not None and self.end > self.deadline
 
+    @property
+    def hidden_config(self) -> float:
+        """Config cycles runtime overlap kept off the host's critical path
+        (wire time that streamed behind this device's compute)."""
+        return self.config_cycles - self.exposed_config
+
 
 @dataclass
 class DeviceTelemetry:
@@ -79,6 +93,7 @@ class DeviceTelemetry:
     invocations: list[Invocation] = field(default_factory=list)
     launch_log: list[LaunchRecord] = field(default_factory=list)
     config_cycles: float = 0.0  # host cycles writing this device's registers
+    exposed_config_cycles: float = 0.0  # ... the part overlap failed to hide
     stall_cycles: float = 0.0  # host cycles blocked on this device
     busy_cycles: float = 0.0
     total_ops: int = 0
@@ -103,7 +118,11 @@ class DeviceTelemetry:
         issue: float | None = None,
         priority: int = 0,
         deadline: float | None = None,
+        config_done: float | None = None,
+        exposed_config: float | None = None,
     ) -> None:
+        if exposed_config is None:
+            exposed_config = config_cycles  # serialized: nothing hides
         self.invocations.append(Invocation(self.device, dict(regs), start, end))
         self.launch_log.append(LaunchRecord(
             tenant=tenant,
@@ -118,10 +137,15 @@ class DeviceTelemetry:
             priority=priority,
             deadline=deadline,
             bytes_elided=bytes_elided,
+            config_done=(config_done if config_done is not None
+                         else (issue if issue is not None else start)
+                         + config_cycles),
+            exposed_config=exposed_config,
         ))
         self.busy_cycles += end - start
         self.total_ops += ops
         self.config_cycles += config_cycles
+        self.exposed_config_cycles += exposed_config
         self.stall_cycles += stall
         self.bytes_sent += bytes_sent
         self.bytes_elided += bytes_elided
@@ -130,8 +154,9 @@ class DeviceTelemetry:
     def record_preemption(self) -> None:
         """Undo the newest launch's *device-side* accounting: the staged
         macro-op never ran. Its config writes stay counted — that host work
-        happened and was wasted, which is exactly what the preemption
-        counters should expose."""
+        happened and was wasted (``exposed_config_cycles`` keeps them for
+        the same reason), which is exactly what the preemption counters
+        should expose."""
         assert self.invocations, "preemption with no recorded launch"
         inv = self.invocations.pop()
         rec = self.launch_log.pop()
@@ -180,6 +205,52 @@ class DeviceTelemetry:
             p_peak=self.model.p_peak,
             bw_config=self.model.bw_config,
         )
+
+
+@dataclass(frozen=True)
+class ResourceTelemetry:
+    """Everything observed about one engine resource during a run: the
+    busy-interval timeline of the host control thread, the config wire, or
+    one device's compute datapath (``repro.engine.resources``). The
+    per-resource analogue of a device gantt — and the substrate for the
+    overlap observables: wire∩compute is the config time runtime overlap
+    kept off the critical path."""
+
+    resource: str  # e.g. "host", "cfg[pcie]", "compute[opengemm:0]"
+    kind: str  # "host" | "wire" | "compute"
+    busy_cycles: float
+    makespan: float
+    intervals: tuple = ()  # (start, end, tag) per reservation
+
+    @classmethod
+    def from_resource(cls, res, makespan: float) -> "ResourceTelemetry":
+        return cls(
+            resource=res.name,
+            kind=res.kind,
+            busy_cycles=res.busy_cycles,
+            makespan=makespan,
+            intervals=tuple(res.intervals()),
+        )
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of the run this resource was busy (→1.0 names the
+        configuration bottleneck: host pipeline, wire, or datapath)."""
+        return self.busy_cycles / self.makespan if self.makespan else 0.0
+
+    @property
+    def idle_cycles(self) -> float:
+        return max(0.0, self.makespan - self.busy_cycles)
+
+    def overlap_with(self, other: "ResourceTelemetry") -> float:
+        """Cycles both resources were busy at once (union semantics — no
+        double counting within either side)."""
+        return overlap_cycles(self.intervals, other.intervals)
+
+    def timeline(self) -> list[tuple[float, float, str]]:
+        """(start, end, tag) busy intervals — renderable beside device
+        gantts and link timelines on one time axis."""
+        return [(s, e, tag) for s, e, tag in self.intervals]
 
 
 @dataclass(frozen=True)
@@ -237,6 +308,9 @@ class SchedulerReport:
     cache_stats: dict[str, CacheStats]
     placements: dict[str, dict[str, int]]  # tenant -> {device: launches}
     links: dict[str, LinkTelemetry] = field(default_factory=dict)
+    # engine occupancy: host / wire / per-device compute busy timelines
+    resources: dict[str, ResourceTelemetry] = field(default_factory=dict)
+    overlap_mode: str = "serialized"
 
     @property
     def bytes_sent(self) -> int:
@@ -255,6 +329,34 @@ class SchedulerReport:
         """Host cycles this run spent writing configuration — on one host
         these serialize through a single control thread (the config port)."""
         return sum(d.config_cycles for d in self.devices.values())
+
+    @property
+    def exposed_config_cycles(self) -> float:
+        """Config cycles the host actually saw: T_set minus whatever the
+        overlapped engine streamed behind compute. Serialized runs expose
+        everything (``exposed == config_cycles``)."""
+        return sum(d.exposed_config_cycles for d in self.devices.values())
+
+    @property
+    def hidden_config_cycles(self) -> float:
+        """Config cycles runtime overlap kept off the critical path — the
+        §5.5 win, measured at dispatch instead of compile time."""
+        return self.config_cycles - self.exposed_config_cycles
+
+    def overlap_summary(self) -> dict[str, float]:
+        """The run's configuration-overlap scoreboard."""
+        total = self.config_cycles
+        hidden = self.hidden_config_cycles
+        return {
+            "config_cycles": total,
+            "exposed_config_cycles": self.exposed_config_cycles,
+            "hidden_config_cycles": hidden,
+            "hidden_fraction": hidden / total if total else 0.0,
+        }
+
+    def resource_timelines(self) -> dict[str, list[tuple[float, float, str]]]:
+        """Per-resource busy intervals on the shared time axis."""
+        return {name: tel.timeline() for name, tel in self.resources.items()}
 
     def launch_log(self) -> list[LaunchRecord]:
         """Every launch of the run in issue order — the substrate for

@@ -1,0 +1,451 @@
+"""repro.engine: the three-resource occupancy model and runtime config
+overlap — serialized bit-exactness (regression-pinned CSR/NoC/PCIe cycle
+counts), the double-buffered overlapped mode's makespan wins, and the
+conservation invariants (config-complete ≤ compute-start, per-resource busy
+cycles preserved across modes, shared-port contention never early), plus the
+shed trigger satellite."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import Cluster, Host, ShedTrigger
+from repro.engine import (
+    Interval,
+    OverlapPolicy,
+    Resource,
+    merge_intervals,
+    overlap_cycles,
+)
+from repro.fabric import LINKS, LinkPort, MigrationPlanner
+from repro.sched import LaunchRequest, Scheduler
+
+# ------------------------------------------------------------- resources
+
+
+def test_resource_fifo_reservation_and_backlog():
+    r = Resource("host", kind="host")
+    a = r.reserve(10.0, 5.0, tag="t0")
+    b = r.reserve(0.0, 3.0, tag="t1")  # FIFO: pushed behind a
+    assert (a.start, a.end) == (10.0, 15.0)
+    assert (b.start, b.end) == (15.0, 18.0)
+    assert r.free == 18.0 and r.busy_cycles == 8.0
+    # half-open [start, end): work completing at exactly `now` holds the
+    # resource for zero further cycles
+    assert r.backlog(18.0) == 0.0 and r.backlog(17.0) == 1.0
+    # `when` is a pure probe: placement unchanged
+    probe = r.when(0.0, 4.0)
+    assert (probe.start, probe.end) == (18.0, 22.0)
+    assert r.free == 18.0 and len(r.log) == 2
+
+
+def test_resource_advance_logs_no_busy_time():
+    r = Resource("host", kind="host")
+    r.reserve(0.0, 5.0)
+    r.advance(100.0)  # captive stall / open-loop idle: occupancy of nothing
+    assert r.free == 100.0 and r.busy_cycles == 5.0
+    r.advance(50.0)  # never moves the clock backward
+    assert r.free == 100.0
+
+
+def test_resource_pop_last_and_overlap_with():
+    r = Resource("compute[x]", kind="compute")
+    r.reserve(0.0, 10.0)
+    r.reserve(20.0, 10.0)
+    assert r.overlap_with(5.0, 25.0) == 10.0  # 5 from each interval
+    popped = r.pop_last()
+    assert (popped.start, popped.end) == (20.0, 30.0)
+    assert r.overlap_with(5.0, 25.0) == 5.0
+
+
+def test_merge_and_overlap_union_semantics():
+    # overlapping members never double-count the same wall-clock cycle
+    assert merge_intervals([(0, 10, ""), (5, 15, ""), (20, 21, "")]) == [
+        (0, 15), (20, 21)]
+    wire = [(0.0, 100.0, "t")]
+    compute = [(0.0, 100.0, "a"), (0.0, 100.0, "b")]  # two devices at once
+    assert overlap_cycles(wire, compute) == 100.0
+
+
+def test_overlap_policy_serialized_exposes_full_t_set():
+    from repro.core.accelerators import REGISTRY
+    from repro.fabric.transport import plan_fields
+
+    xfer = plan_fields(16, REGISTRY["opengemm"], LINKS["pcie"])
+    assert xfer.mode == "burst"
+    ser, ov = OverlapPolicy("serialized"), OverlapPolicy("overlapped")
+    assert not ser.is_async(True, xfer) and ser.exposed_cost(True, xfer) == xfer.t_set
+    assert ov.is_async(True, xfer) and ov.exposed_cost(True, xfer) == xfer.host_cycles
+    # sequential configuration can never overlap (§2.2)
+    assert not ov.is_async(False, xfer)
+    # nor can a zero-wire CSR "transfer"
+    csr = plan_fields(16, REGISTRY["opengemm"], LINKS["csr"])
+    assert not ov.is_async(True, csr)
+
+
+# ------------------------------------- serialized mode is regression-pinned
+
+# Cycle counts captured from the pre-engine scheduler (PR 4 tree) for one
+# fixed open-loop stream on a mixed gemmini+opengemm×2 pool. The engine
+# refactor must reproduce them bit-exactly in serialized mode — the same
+# guarantee PR 3 held for the CSR port, now pinned per link class.
+_PINNED = {
+    "csr": dict(
+        makespan=325.0, bytes_sent=248, bytes_elided=280, config_cycles=133.0,
+        ends=[27.0, 34.0, 75.0, 94.0, 93.0, 125.0, 144.0, 143.0, 175.0,
+              194.0, 193.0, 225.0, 244.0, 243.0, 275.0, 294.0, 293.0, 325.0]),
+    "noc": dict(
+        makespan=813.0, bytes_sent=248, bytes_elided=280, config_cycles=621.0,
+        ends=[61.0, 102.0, 178.0, 222.0, 246.0, 305.0, 349.0, 373.0, 432.0,
+              476.0, 500.0, 559.0, 603.0, 627.0, 686.0, 730.0, 754.0, 813.0]),
+    "pcie": dict(
+        makespan=8359.0, bytes_sent=248, bytes_elided=280, config_cycles=8167.0,
+        ends=[474.0, 928.0, 1419.0, 1885.0, 2331.0, 2807.0, 3273.0, 3719.0,
+              4195.0, 4661.0, 5107.0, 5583.0, 6049.0, 6495.0, 6971.0, 7437.0,
+              7883.0, 8359.0]),
+}
+
+
+def _pinned_stream():
+    reqs = []
+    for i in range(6):
+        reqs.append(LaunchRequest("t0", (16, 16, 16),
+                                  {"A": 0x1000 + 64 * i, "B": 0x8000},
+                                  arrival_time=float(40 * i)))
+        reqs.append(LaunchRequest("t1", (8, 32, 8),
+                                  {"A": 0x90000 + 64 * i, "zp": 3},
+                                  arrival_time=float(40 * i + 7)))
+        reqs.append(LaunchRequest("t2", (32, 8, 16), {"C": 0x40 * i},
+                                  accel="gemmini",
+                                  arrival_time=float(40 * i + 11)))
+    return reqs
+
+
+def test_serialized_mode_reproduces_pre_engine_numbers_bit_exactly():
+    for link, pin in _PINNED.items():
+        s = Scheduler.from_registry({"gemmini": 1, "opengemm": 2}, link=link)
+        assert s.overlap.mode == "serialized"  # the default
+        rep = s.run_open_loop(_pinned_stream())
+        assert rep.makespan == pin["makespan"], link
+        assert s.host == pin["makespan"], link
+        assert rep.bytes_sent == pin["bytes_sent"]
+        assert rep.bytes_elided == pin["bytes_elided"]
+        assert rep.config_cycles == pin["config_cycles"], link
+        assert [r.end for r in rep.launch_log()] == pin["ends"], link
+        # serialized configuration exposes its entire T_set
+        assert rep.exposed_config_cycles == rep.config_cycles
+        assert rep.hidden_config_cycles == 0.0
+
+
+def test_overlapped_on_csr_degenerates_to_serialized():
+    """A core-local port has no wire time to hide: overlapped mode must be
+    bit-identical to serialized (and to the pre-engine numbers)."""
+    s = Scheduler.from_registry({"gemmini": 1, "opengemm": 2}, link="csr",
+                                overlap="overlapped")
+    rep = s.run_open_loop(_pinned_stream())
+    assert rep.makespan == _PINNED["csr"]["makespan"]
+    assert [r.end for r in rep.launch_log()] == _PINNED["csr"]["ends"]
+    assert rep.hidden_config_cycles == 0.0
+
+
+# ------------------------------------------------------- the overlap win
+
+
+def _heavy_stream(n=16, dims=(24, 24, 24), nfields=48):
+    """Descriptor-heavy launches (48 advancing fields) — the regime where
+    the host's captive wire time is the serialized bottleneck."""
+    return [LaunchRequest("t0", dims, {f"p{j}": 64 * i + j
+                                       for j in range(nfields)})
+            for i in range(n)]
+
+
+def _run(link, mode, *, buffers=2, reqs=None):
+    s = Scheduler.from_registry({"opengemm": 1}, link=link, overlap=mode,
+                                staging_buffers=buffers)
+    return s.run(reqs if reqs is not None else _heavy_stream())
+
+
+def test_overlapped_hides_config_behind_compute_on_fabric_links():
+    for link in ("noc", "pcie"):
+        ser = _run(link, "serialized")
+        ov = _run(link, "overlapped")
+        assert ov.makespan < ser.makespan, link
+        assert ov.hidden_config_cycles > 0.0
+        assert ov.exposed_config_cycles < ov.config_cycles
+        # total T_set is conserved — only its placement moved
+        assert ov.config_cycles == ser.config_cycles
+
+
+def test_double_buffering_strictly_helps_and_saturates():
+    """One bank (buffers=1) cannot stream the next launch's config while
+    the current one computes; two can (the §5.5 picture). Deeper banks
+    cannot hurt."""
+    one = _run("noc", "overlapped", buffers=1).makespan
+    two = _run("noc", "overlapped", buffers=2).makespan
+    four = _run("noc", "overlapped", buffers=4).makespan
+    assert two < one
+    assert four <= two
+
+
+def test_launch_queue_ready_gates_compute_start():
+    from repro.core.accelerators import REGISTRY
+    from repro.sched import LaunchQueue
+
+    q = LaunchQueue(REGISTRY["opengemm"], depth=2)
+    t = q.submit(10.0, duration=50.0, ready=200.0)  # DMA lands at 200
+    assert t.start == 200.0 and t.end == 250.0
+    assert t.host_after == 10.0  # the host was long gone
+
+
+# ---------------------------------------------- conservation (ISSUE 5 3a-c)
+
+
+@st.composite
+def overlap_streams(draw):
+    reqs = []
+    t = 0.0
+    for i in range(draw(st.integers(1, 20))):
+        t += float(draw(st.integers(0, 200)))
+        dims = tuple(8 * draw(st.integers(1, 6)) for _ in range(3))
+        nfields = draw(st.integers(0, 40))
+        extra = {f"p{j}": draw(st.integers(0, 3)) * 64 + j
+                 for j in range(nfields)}
+        reqs.append(LaunchRequest(f"t{draw(st.integers(0, 2))}", dims, extra,
+                                  arrival_time=t))
+    return reqs
+
+
+@settings(max_examples=30, deadline=None)
+@given(overlap_streams(), st.sampled_from(["csr", "noc", "pcie"]),
+       st.sampled_from(["serialized", "overlapped"]))
+def test_config_complete_never_lands_after_compute_start(reqs, link, mode):
+    """Invariant (a): a launch's register image is fully on-device before
+    its macro-op begins — in every mode, on every link."""
+    s = Scheduler.from_registry({"opengemm": 1}, link=link, overlap=mode)
+    rep = s.run_open_loop(list(reqs))
+    for rec in rep.launch_log():
+        assert rec.config_done <= rec.start + 1e-9, rec
+
+
+@settings(max_examples=30, deadline=None)
+@given(overlap_streams(), st.sampled_from(["noc", "pcie"]))
+def test_per_resource_busy_cycles_conserved_across_modes(reqs, link):
+    """Invariant (b): overlap moves work in time, never in amount — host,
+    wire, and compute busy cycles (and config bytes) are identical between
+    serialized and overlapped runs of one stream."""
+    def busy(mode):
+        s = Scheduler.from_registry({"opengemm": 1}, link=link, overlap=mode)
+        rep = s.run_open_loop(list(reqs))
+        by_kind = {}
+        for tel in rep.resources.values():
+            by_kind[tel.kind] = by_kind.get(tel.kind, 0.0) + tel.busy_cycles
+        return by_kind, rep.bytes_sent, rep.config_cycles
+
+    (ser, ser_bytes, ser_cfg) = busy("serialized")
+    (ov, ov_bytes, ov_cfg) = busy("overlapped")
+    assert set(ser) == set(ov) == {"host", "wire", "compute"}
+    for kind in ser:
+        assert abs(ser[kind] - ov[kind]) < 1e-9, (kind, ser, ov)
+    assert ser_bytes == ov_bytes
+    assert ser_cfg == ov_cfg
+
+
+@settings(max_examples=20, deadline=None)
+@given(overlap_streams(), st.sampled_from(["noc", "pcie"]),
+       st.sampled_from(["serialized", "overlapped"]))
+def test_shared_port_contention_never_completes_earlier(reqs, link, mode):
+    """Invariant (c): putting two hosts behind one cluster LinkPort (the
+    PCIe-switch topology) can only delay launches, never finish one earlier
+    than the same launch with private wires."""
+    def run(shared):
+        cl = Cluster.uniform(2, {"opengemm": 1}, policy="round_robin",
+                             link=link, overlap=mode, shared_port=shared)
+        rep = cl.run(list(reqs))
+        return {(r.tenant, r.arrival): r.end for r in rep.records}, rep.makespan
+
+    private, private_ms = run(False)
+    shared, shared_ms = run(True)
+    assert set(private) == set(shared)
+    for key, end in shared.items():
+        assert end >= private[key] - 1e-9, key
+    assert shared_ms >= private_ms - 1e-9
+
+
+def test_shared_port_carries_both_hosts_transfers():
+    cl = Cluster.uniform(2, {"opengemm": 1}, policy="round_robin",
+                         link="pcie", shared_port=True)
+    reqs = [LaunchRequest(f"t{i % 2}", (8, 8, 8), {"A": 64 * i},
+                          arrival_time=float(i)) for i in range(8)]
+    rep = cl.run(reqs)
+    ports = {h.sched.port for h in cl.hosts}
+    assert len(ports) == 1  # one wire, every host
+    (port,) = ports
+    assert len(port.log) == len(reqs)
+    assert port.name.endswith(":shared")
+    # the same wire shows up under each host's telemetry key
+    assert set(rep.links()) == {"h0/cfg[pcie]:shared", "h1/cfg[pcie]:shared"}
+
+
+# ------------------------------------------------------------- telemetry
+
+
+def test_report_exports_per_resource_timelines():
+    rep = _run("noc", "overlapped")
+    kinds = {tel.kind for tel in rep.resources.values()}
+    assert kinds == {"host", "wire", "compute"}
+    assert "host" in rep.resources
+    host = rep.resources["host"]
+    assert 0.0 < host.utilization <= 1.0
+    assert host.idle_cycles == rep.makespan - host.busy_cycles
+    timelines = rep.resource_timelines()
+    assert set(timelines) == set(rep.resources)
+    # the wire∩compute overlap the resources report agrees in sign with
+    # the per-launch exposed accounting
+    wire = next(t for t in rep.resources.values() if t.kind == "wire")
+    compute = next(t for t in rep.resources.values() if t.kind == "compute")
+    assert wire.overlap_with(compute) > 0.0
+    assert rep.overlap_summary()["hidden_fraction"] > 0.0
+    assert rep.overlap_mode == "overlapped"
+
+
+def test_port_wait_estimate_is_a_resource_query():
+    """The max/half-open backlog formula now lives in Resource.backlog —
+    the host's estimate must equal the hand-computed version, boundary
+    cycles included."""
+    h = Host.from_registry("h0", {"opengemm": 1}, link="noc")
+    for i in range(4):
+        h.dispatch(LaunchRequest("t0", (16, 16, 16), {"A": 64 * i}))
+    host_clock, wire_end = h.clock, h.sched.port.busy_until
+    for now in (0.0, host_clock / 2, wire_end, host_clock, host_clock + 10):
+        want = max(0.0, host_clock - now,
+                   wire_end - now if wire_end > now else 0.0)
+        assert h.port_wait_estimate(now=now) == want, now
+    # a transfer completing exactly at `now` holds the port zero cycles
+    assert h.port_wait_estimate(now=host_clock) == 0.0
+
+
+def test_overlap_roofline_reflects_only_exposed_t_set():
+    """The overlap-adjusted roofline point: hiding config cycles raises
+    the effective BW_cfg (Eq. 4 with exposed-only T_set) and shifts the
+    ridge point left; on a serialized host it coincides with the plain
+    host point."""
+    def points(mode):
+        h = Host.from_registry("h0", {"opengemm": 1}, link="pcie",
+                               overlap=mode)
+        for req in _heavy_stream():
+            h.dispatch(req)
+        makespan = h.report().makespan
+        return h.roofline_point(makespan), h.overlap_roofline_point(makespan)
+
+    ser_plain, ser_adj = points("serialized")
+    _, ov_adj = points("overlapped")
+    assert ser_adj.bw_config == ser_plain.bw_config  # nothing hidden
+    assert ov_adj.bw_config > ser_adj.bw_config
+    # the ridge I_OC = P_peak / BW_cfg moves left under overlap
+    assert (ov_adj.p_peak / ov_adj.bw_config
+            < ser_adj.p_peak / ser_adj.bw_config)
+
+
+# ------------------------------------------------- shed trigger (satellite)
+
+
+def _big_req(tenant, i, n_static=32):
+    extra = {f"w{j}": 7 * j for j in range(n_static)}
+    extra["A"] = 0x1000 + 64 * i
+    return LaunchRequest(tenant, (8, 16, 16), extra, accel="gemmini")
+
+
+def _skewed_hosts():
+    h0 = Host.from_registry("h0", {"gemmini": 1, "opengemm": 1}, link="noc")
+    h1 = Host.from_registry("h1", {"gemmini": 1, "opengemm": 1}, link="noc")
+    for i in range(8):
+        h0.dispatch(_big_req("hot", i))
+        h0.dispatch(_big_req("side", i, n_static=4))
+    return h0, h1
+
+
+def test_shed_trigger_fires_only_after_sustained_heat():
+    h0, h1 = _skewed_hosts()
+    assert h0.port_wait_estimate(now=0.0) > 0.0 == h1.port_wait_estimate(now=0.0)
+    trig = ShedTrigger(MigrationPlanner(link="noc"), k=1.5, sustain=2)
+    assert trig.observe([h0, h1], now=0.0) == []  # debounced: one epoch
+    (dec,) = trig.observe([h0, h1], now=0.0)  # sustained: shed
+    assert (dec.src, dec.dst) == ("h0", "h1")
+    assert dec.tenant == "hot"  # the heaviest stream moves
+    assert dec.src_wait > trig.k * dec.median_wait
+    # the planner executed the cheaper move — a big warm context over NoC
+    assert dec.record.estimate.mode == "warm"
+    # the tenant really moved: cold at the source, warm at the destination
+    assert all(d.cache.context("hot") is None for d in h0.sched.devices)
+    gem = next(d for d in h1.sched.devices if d.model.name == "gemmini")
+    assert gem.cache.context("hot") is not None
+    # the streak reset: the next epoch must re-sustain before shedding again
+    assert trig.observe([h0, h1], now=0.0) == []
+
+
+def test_shed_trigger_holds_on_balanced_and_idle_clusters():
+    trig = ShedTrigger(MigrationPlanner(link="noc"), k=1.5, sustain=1)
+    # idle: median 0, nothing to rebalance against
+    idle = [Host.from_registry(f"h{i}", {"gemmini": 1}, link="noc")
+            for i in range(2)]
+    assert trig.observe(idle, now=0.0) == []
+    # balanced: equal load on both hosts, nobody exceeds k× median
+    hosts = [Host.from_registry(f"h{i}", {"gemmini": 1}, link="noc")
+             for i in range(2)]
+    for i in range(4):
+        for h in hosts:
+            h.dispatch(_big_req("t", i, n_static=8))
+    assert trig.observe(hosts, now=0.0) == []
+
+
+def test_shed_moves_slot_context_with_the_tenant():
+    h0, h1 = _skewed_hosts()
+    h0.adopt_context("hot")  # a bridged tenant's KV home
+    trig = ShedTrigger(MigrationPlanner(link="noc"), k=1.5, sustain=1)
+    (dec,) = trig.observe([h0, h1], now=0.0)
+    assert dec.tenant == "hot"
+    assert not h0.hosts_context("hot") and h1.hosts_context("hot")
+
+
+def test_shed_victim_must_be_resident_not_historical():
+    """A tenant that already migrated away (its context invalidated at the
+    source) is never re-picked as the victim on the strength of its
+    cumulative launch count — the next-heaviest *resident* stream is."""
+    h0, h1 = _skewed_hosts()  # "hot" has 2x the launches of "side"
+    trig = ShedTrigger(MigrationPlanner(link="noc"), k=1.5, sustain=1)
+    (first,) = trig.observe([h0, h1], now=0.0)
+    assert first.tenant == "hot"
+    # h0's backlog is unchanged by the move, so it is still hot — but the
+    # departed tenant must not be shed twice
+    (second,) = trig.observe([h0, h1], now=0.0)
+    assert second.tenant == "side"
+
+
+def test_simultaneous_hot_hosts_shed_to_distinct_destinations():
+    """Two hosts running hot in one epoch must not both dump onto the one
+    coldest host off stale backlog numbers — each shed takes a distinct
+    destination."""
+    hosts = [Host.from_registry(f"h{i}", {"gemmini": 1, "opengemm": 1},
+                                link="noc") for i in range(4)]
+    for i in range(8):
+        hosts[0].dispatch(_big_req("a", i))
+        hosts[1].dispatch(_big_req("b", i))
+    trig = ShedTrigger(MigrationPlanner(link="noc"), k=1.2, sustain=1)
+    decisions = trig.observe(hosts, now=0.0)
+    assert {d.src for d in decisions} == {"h0", "h1"}
+    dsts = [d.dst for d in decisions]
+    assert len(set(dsts)) == len(dsts) == 2
+    assert set(dsts) <= {"h2", "h3"}
+
+
+def test_single_hot_host_among_idle_peers_still_sheds():
+    """With ≥3 hosts and only one loaded, the cluster median wait is 0 —
+    the trigger must still fire (a zero median means the rest of the
+    cluster is free, the strongest possible reason to shed), while a
+    fully idle cluster still never does."""
+    hosts = [Host.from_registry(f"h{i}", {"gemmini": 1, "opengemm": 1},
+                                link="noc") for i in range(3)]
+    for i in range(8):
+        hosts[0].dispatch(_big_req("hog", i))
+    trig = ShedTrigger(MigrationPlanner(link="noc"), k=1.5, sustain=1)
+    (dec,) = trig.observe(hosts, now=0.0)
+    assert dec.src == "h0" and dec.tenant == "hog"
+    assert dec.median_wait == 0.0
