@@ -121,11 +121,32 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+def export_trace(path: str, smoke: bool) -> None:
+    """Re-run one representative cell (affinity router, 2 hosts, lowest
+    swept rate) with a tracer attached and export the Perfetto trace with
+    its conservation-checked cycle attribution embedded."""
+    from repro.obs import Tracer, attribute, write_trace
+
+    profiles = tenant_mix()
+    horizon = 60_000.0 if smoke else 200_000.0
+    requests = generate(profiles, rate=1 / 20, horizon=horizon, seed=7)
+    tracer = Tracer()
+    cluster = Cluster.uniform(2, {"gemmini": 1, "opengemm": 1},
+                              policy="affinity", tracer=tracer)
+    rep = cluster.run(list(requests), slo=slo_targets(profiles))
+    write_trace(tracer, path, attribution=attribute(rep).check(),
+                metrics=rep.metrics)
+    print(f"wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small horizon / fewer cells (CI time budget)")
     ap.add_argument("--out", default="BENCH_cluster_slo.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="also write a Perfetto/chrome-trace JSON of one "
+                         "instrumented representative cell")
     args = ap.parse_args()
 
     result = run(smoke=args.smoke)
@@ -150,6 +171,9 @@ def main() -> None:
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2, sort_keys=True))
     print(f"wrote {out}")
+
+    if args.trace_out:
+        export_trace(args.trace_out, smoke=args.smoke)
 
     # acceptance (ISSUE 2): affinity routing with per-host serialization
     # modeled beats round-robin on p99 queueing delay and SLO attainment at

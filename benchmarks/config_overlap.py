@@ -166,11 +166,29 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+def export_trace(path: str, smoke: bool) -> None:
+    """Re-run the sweep's most overlap-sensitive cell (PCIe, mid intensity,
+    overlapped) instrumented and export its trace + cycle attribution."""
+    from repro.obs import Tracer, attribute, write_trace
+
+    n = 8 if smoke else 24
+    tracer = Tracer()
+    s = Scheduler.from_registry({"opengemm": 1}, link="pcie",
+                                overlap="overlapped", tracer=tracer)
+    rep = s.run(stream(INTENSITIES["mid"], n))
+    write_trace(tracer, path, attribution=attribute(rep).check(),
+                metrics=rep.metrics)
+    print(f"wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fewer launches / intensities (CI time budget)")
     ap.add_argument("--out", default="BENCH_config_overlap.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="also write a Perfetto/chrome-trace JSON of one "
+                         "instrumented representative cell")
     args = ap.parse_args()
 
     result = run(smoke=args.smoke)
@@ -197,6 +215,9 @@ def main() -> None:
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2, sort_keys=True))
     print(f"wrote {out}")
+
+    if args.trace_out:
+        export_trace(args.trace_out, smoke=args.smoke)
 
     # acceptance (ISSUE 5): overlap never regresses, strictly wins on fabric
     for c in result["cells"]:

@@ -212,11 +212,39 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+def export_trace(path: str, smoke: bool) -> None:
+    """Instrument one executed warm migration (NoC, Gemmini, 64-field
+    context): the snapshot burst shows up on the migration wire lane and is
+    classified ``other_transfer`` by the attribution (it belongs to no
+    launch), while the delta launch traces normally on the destination."""
+    from repro.obs import Tracer, attribute, write_trace
+
+    tracer = Tracer()
+    n_static = 8 if smoke else 64
+    src = Host.from_registry("src", dict(POOL), link="noc", tracer=tracer)
+    for i in range(3):
+        src.dispatch(big_ctx_request("t0", "gemmini", n_static,
+                                     0x1000 + 64 * i))
+    dst = Host.from_registry("dst", dict(POOL), link="noc", tracer=tracer)
+    planner = MigrationPlanner(link="noc", policy="warm")
+    planner.port.tracer = tracer
+    probe = big_ctx_request("t0", "gemmini", n_static, ptr=0x2000)
+    planner.migrate("t0", src, dst, probe, now=src.clock)
+    dst.dispatch(probe)
+    rep = dst.report()
+    write_trace(tracer, path, attribution=attribute(rep).check(),
+                metrics=rep.metrics)
+    print(f"wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fewer plan sizes / context sizes (CI time budget)")
     ap.add_argument("--out", default="BENCH_fabric_migration.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="also write a Perfetto/chrome-trace JSON of one "
+                         "instrumented warm migration")
     args = ap.parse_args()
 
     result = run(smoke=args.smoke)
@@ -251,6 +279,9 @@ def main() -> None:
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2, sort_keys=True))
     print(f"wrote {out}")
+
+    if args.trace_out:
+        export_trace(args.trace_out, smoke=args.smoke)
 
     # acceptance (ISSUE 3a): burst DMA beats per-register MMIO on
     # multi-register plans, on every fabric link class and device kind

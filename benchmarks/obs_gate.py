@@ -1,0 +1,137 @@
+"""CI observability gate — conservation, trace schema, geomean floors.
+
+Three checks over the artifacts the bench-smoke job just produced, all
+stdlib-only so the gate can run before (or without) the repo's deps:
+
+1. **Trace schema** — every ``TRACE_*.json`` must be a loadable Chrome
+   Trace Event Format document (the same invariants
+   ``repro.obs.export.validate_trace`` enforces at write time, re-checked
+   here from the serialized artifact so a drifting exporter cannot pass
+   its own test).
+2. **Conservation** — each trace's embedded cycle attribution must satisfy
+   the invariant: worst per-lane residual (|classified − occupancy-union|
+   as a fraction of makespan) at most ``MAX_RESIDUAL`` (0.1%). A residual
+   means a lane has cycles that were dropped or double-booked — exactly
+   the failure mode that lets configuration cost hide from profilers.
+3. **Geomean floors** — every ``BENCH_*.json`` ``geomean`` key is compared
+   against ``benchmarks/geomean_baseline.json`` (committed floors = 0.9 ×
+   the seeded smoke values; every key is higher-is-better). A key below
+   its floor, or a baselined key missing from the artifact, fails.
+
+Usage: ``python benchmarks/obs_gate.py [--dir .]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+MAX_RESIDUAL = 1e-3  # worst lane residual / makespan the gate tolerates
+
+EVENT_REQUIRED = {
+    "X": ("name", "cat", "ph", "ts", "dur", "pid", "tid"),
+    "i": ("name", "ph", "ts", "pid", "tid"),
+    "C": ("name", "ph", "ts", "pid", "tid", "args"),
+    "M": ("name", "ph", "pid"),
+}
+
+
+def check_trace(path: str) -> list[str]:
+    problems: list[str] = []
+    try:
+        doc = json.load(open(path))
+    except (OSError, ValueError) as exc:
+        return [f"{path}: unreadable ({exc})"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: no traceEvents"]
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        required = EVENT_REQUIRED.get(ph)
+        if required is None:
+            problems.append(f"{path}: event {i} has unknown ph {ph!r}")
+            continue
+        missing = [k for k in required if k not in ev]
+        if missing:
+            problems.append(f"{path}: event {i} ({ph}) missing {missing}")
+        if ph == "X" and ev.get("dur", 0) < 0:
+            problems.append(f"{path}: event {i} has negative dur")
+    lanes = {(ev["pid"], ev["tid"]) for ev in events if ev.get("ph") == "X"}
+    if not lanes:
+        problems.append(f"{path}: no span lanes")
+
+    att = doc.get("attribution")
+    if att is None:
+        problems.append(f"{path}: no embedded attribution")
+    else:
+        residual = att.get("max_residual")
+        if residual is None:
+            problems.append(f"{path}: attribution has no max_residual")
+        elif residual > MAX_RESIDUAL:
+            problems.append(
+                f"{path}: conservation drifted — max lane residual "
+                f"{residual:.3e} > {MAX_RESIDUAL:.0e} of makespan")
+        for name, lane in att.get("lanes", {}).items():
+            if lane["components"].get("idle", 0.0) < -1e-9:
+                problems.append(f"{path}: lane {name} has negative idle")
+    return problems
+
+
+def check_geomeans(bench_paths: list[str], baseline_path: str) -> list[str]:
+    problems: list[str] = []
+    baseline = json.load(open(baseline_path))
+    seen: set[str] = set()
+    for path in bench_paths:
+        doc = json.load(open(path))
+        name = doc.get("benchmark")
+        floors = baseline.get(name)
+        if floors is None:
+            continue  # benches without committed floors only need the key
+        seen.add(name)
+        geomean = doc.get("geomean", {})
+        for key, floor in sorted(floors.items()):
+            got = geomean.get(key)
+            if got is None:
+                problems.append(f"{path}: geomean key {key!r} disappeared "
+                                f"(baseline floor {floor})")
+            elif got < floor:
+                problems.append(f"{path}: geomean {key} = {got:.4f} below "
+                                f"committed floor {floor:.4f}")
+    for name in sorted(set(baseline) - seen):
+        problems.append(f"baselined benchmark {name!r} produced no "
+                        f"BENCH artifact")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".",
+                    help="directory holding TRACE_*.json / BENCH_*.json")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "geomean_baseline.json"))
+    args = ap.parse_args()
+
+    traces = sorted(glob.glob(os.path.join(args.dir, "TRACE_*.json")))
+    benches = sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    if not traces:
+        sys.exit(f"obs gate: no TRACE_*.json artifacts in {args.dir}")
+
+    problems: list[str] = []
+    for path in traces:
+        problems += check_trace(path)
+    problems += check_geomeans(benches, args.baseline)
+
+    if problems:
+        print("\n".join(problems))
+        sys.exit(f"obs gate: {len(problems)} problem(s)")
+    print(f"obs gate ok: {len(traces)} trace(s) schema-valid, conservation "
+          f"within {MAX_RESIDUAL:.0e}; geomean floors held across "
+          f"{len(benches)} bench artifact(s)")
+
+
+if __name__ == "__main__":
+    main()

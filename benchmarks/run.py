@@ -8,9 +8,40 @@ benches; ``derived`` is the headline metric of that table).
 
 from __future__ import annotations
 
+import argparse
+
+
+def export_trace(path: str) -> None:
+    """Write a Perfetto/chrome-trace JSON of one small instrumented
+    mixed-pool scheduler run (NoC fabric, overlapped staging), with its
+    conservation-checked cycle attribution embedded."""
+    from repro.obs import Tracer, attribute, write_trace
+    from repro.sched import LaunchRequest, Scheduler
+
+    tracer = Tracer()
+    s = Scheduler.from_registry({"gemmini": 1, "opengemm": 1}, link="noc",
+                                overlap="overlapped", tracer=tracer)
+    reqs = [
+        LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                      {f"p{j}": 64 * i + j for j in range(16)},
+                      accel="opengemm" if i % 2 else "gemmini",
+                      arrival_time=40.0 * i)
+        for i in range(12)
+    ]
+    rep = s.run_open_loop(reqs)
+    write_trace(tracer, path, attribution=attribute(rep).check(),
+                metrics=rep.metrics)
+    print(f"wrote {path}")
+
 
 def main() -> None:
     from benchmarks import decode_config_wall, dispatch_overlap, paper_figures
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-out", default=None,
+                    help="also write a Perfetto/chrome-trace JSON of a "
+                         "small instrumented scheduler run")
+    args = ap.parse_args()
 
     print("name,us_per_call,derived")
 
@@ -52,6 +83,9 @@ def main() -> None:
     for row in decode_config_wall.run(total_tokens=32, fuse_levels=(1, 4, 16)):
         print(f"decode_wall_k{row['tokens_per_launch']},"
               f"{row['us_per_token']:.1f},tok_per_s={row['tok_per_s']:.0f}")
+
+    if args.trace_out:
+        export_trace(args.trace_out)
 
 
 if __name__ == "__main__":

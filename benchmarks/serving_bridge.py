@@ -162,11 +162,34 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+def export_trace(path: str, smoke: bool) -> None:
+    """Re-run the first cell's sticky-affinity configuration closed-loop
+    with a tracer attached: the exported trace carries host/wire/compute
+    lanes plus per-tenant step and token lanes, with the conservation-
+    checked cycle attribution and the unified metrics registry embedded."""
+    from repro.obs import Tracer, attribute, write_trace
+
+    model, params, decode_fn = build_model()
+    tenants = make_tenants(model, params, decode_fn, n_tenants=6,
+                           max_new=6 if smoke else 10)
+    tracer = Tracer()
+    cluster = Cluster.uniform(2, {"opengemm": 1}, policy="affinity",
+                              sticky=True, link="noc",
+                              max_contexts=MAX_CONTEXTS, tracer=tracer)
+    rep = ClosedLoopDriver(tenants, cluster).run()
+    write_trace(tracer, path, attribution=attribute(rep).check(),
+                metrics=rep.metrics)
+    print(f"wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="fewer cells / shorter generations (CI time budget)")
     ap.add_argument("--out", default="BENCH_serving_bridge.json")
+    ap.add_argument("--trace-out", default=None,
+                    help="also write a Perfetto/chrome-trace JSON of one "
+                         "instrumented closed-loop cell")
     args = ap.parse_args()
 
     result = run(smoke=args.smoke)
@@ -188,6 +211,9 @@ def main() -> None:
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2, sort_keys=True))
     print(f"wrote {out}")
+
+    if args.trace_out:
+        export_trace(args.trace_out, smoke=args.smoke)
 
     # acceptance (ISSUE 4)
     for cell in result["cells"]:

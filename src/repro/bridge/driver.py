@@ -75,7 +75,8 @@ class ClosedLoopDriver:
     """Drives bridged tenant engines to completion against one cluster."""
 
     def __init__(self, tenants: Sequence[TenantEngine], cluster: Cluster,
-                 *, start_offsets: Mapping[str, float] | None = None):
+                 *, start_offsets: Mapping[str, float] | None = None,
+                 tracer=None):
         assert tenants, "need at least one tenant engine"
         names = [t.tenant for t in tenants]
         assert len(set(names)) == len(names), f"duplicate tenants in {names}"
@@ -83,6 +84,10 @@ class ClosedLoopDriver:
         self.cluster = cluster
         self.steps: list[StepRecord] = []
         self._offsets = dict(start_offsets or {})
+        # reuse the cluster's tracer by default so step spans and the
+        # launch spans the hosts already emit land in one trace
+        self.tracer = tracer if tracer is not None \
+            else getattr(cluster, "tracer", None)
 
     def _dispatch(self, te: TenantEngine, desc: dict, now: float):
         """Route + dispatch one mirrored launch; returns its
@@ -148,6 +153,13 @@ class ClosedLoopDriver:
                 config_cycles=cfg,
                 exposed_config=exposed,
             ))
+            if self.tracer is not None:
+                self.tracer.span("step", "step", now, t,
+                                 lane=f"step[{name}]", tenant=name,
+                                 step=te.steps, tokens=produced,
+                                 launches=len(descs), bytes_sent=sent)
+                self.tracer.counter("tokens", t, float(te.tokens),
+                                    lane=f"tokens[{name}]", tenant=name)
             heapq.heappush(ready, (t, name))
         for te in self.tenants.values():
             te.drain()

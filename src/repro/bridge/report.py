@@ -49,6 +49,14 @@ class BridgeReport:
     # -- tokens --------------------------------------------------------------
 
     @property
+    def metrics(self):
+        """The run's unified :class:`~repro.obs.metrics.MetricsRegistry`:
+        the cluster registry (every host's ``sched.*`` series under a
+        ``host=`` label) with the ``bridge.*`` step-level series folded in
+        by :func:`build_bridge_report`."""
+        return self.cluster.metrics
+
+    @property
     def serving(self) -> dict[str, TenantServing]:
         return self.cluster.serving
 
@@ -76,8 +84,13 @@ class BridgeReport:
         """How much of the run's descriptor T_set the engine hid behind
         compute (0.0 everywhere on a serialized cluster) — the bridge-level
         view of the §5.5 runtime win that shortened every feedback edge."""
-        cfg = sum(s.config_cycles for s in self.steps)
-        hidden = sum(s.hidden_config for s in self.steps)
+        m = self.metrics
+        if m is not None and m.has("bridge.config_cycles"):
+            cfg = m.total("bridge.config_cycles")
+            hidden = cfg - m.total("bridge.exposed_config_cycles")
+        else:
+            cfg = sum(s.config_cycles for s in self.steps)
+            hidden = sum(s.hidden_config for s in self.steps)
         return {
             "config_cycles": cfg,
             "exposed_config_cycles": cfg - hidden,
@@ -154,6 +167,19 @@ def build_bridge_report(cluster, steps: Sequence["StepRecord"],
         for te in tenants
     }
     report.attach_serving(serving)
+    if report.metrics is not None:
+        # step-level series beside the cluster's launch-level ones, so one
+        # registry answers both "how many tokens" and "how congested"
+        m = report.metrics
+        for s in steps:
+            m.counter("bridge.tokens", tenant=s.tenant).add(s.tokens)
+            m.counter("bridge.steps", tenant=s.tenant).add(1)
+            m.counter("bridge.config_cycles",
+                      tenant=s.tenant).add(s.config_cycles)
+            m.counter("bridge.exposed_config_cycles",
+                      tenant=s.tenant).add(s.exposed_config)
+            m.histogram("bridge.decode_latency",
+                        tenant=s.tenant).observe(s.latency)
     return BridgeReport(
         cluster=report,
         steps=list(steps),

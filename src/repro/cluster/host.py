@@ -74,12 +74,18 @@ class Host:
         overlap: str = "serialized",
         staging_buffers: int = 2,
         port: LinkPort | None = None,
+        tracer=None,
     ):
         self.id = host_id
+        # bind the host id into every span this shard emits (repro.obs):
+        # one cluster-wide tracer still attributes each event to its host
+        self.tracer = tracer
+        bound = tracer.bind(host=host_id) if tracer is not None else None
         self.sched = Scheduler(pool, depth=depth, max_contexts=max_contexts,
                                policy=policy, cache_enabled=cache_enabled,
                                link=link, overlap=overlap,
-                               staging_buffers=staging_buffers, port=port)
+                               staging_buffers=staging_buffers, port=port,
+                               tracer=bound)
         # tenants whose *slot context* (a hosted engine shard's KV cache)
         # lives on this host — the binding residency the sticky router
         # consults; distinct from register-cache warmth, which is advisory

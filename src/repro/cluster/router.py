@@ -138,10 +138,13 @@ class Cluster:
     """A pool of hosts + a router: the open-loop serving fabric."""
 
     def __init__(self, hosts: Sequence[Host], *, policy: str = "affinity",
-                 seed: int = 0, sticky: bool = False):
+                 seed: int = 0, sticky: bool = False, tracer=None):
         self.hosts = list(hosts)
         self.router = Router(self.hosts, policy=policy, seed=seed,
                              sticky=sticky)
+        # the cluster-wide tracer (repro.obs): hosts hold host-bound views
+        # of it; the closed-loop bridge driver picks it up from here
+        self.tracer = tracer
 
     @classmethod
     def uniform(
@@ -159,6 +162,7 @@ class Cluster:
         sticky: bool = False,
         overlap: str = "serialized",
         shared_port: bool = False,
+        tracer=None,
     ) -> "Cluster":
         """``Cluster.uniform(4, {"gemmini": 1, "opengemm": 1})`` — n
         identical hosts, each carrying one shard of the mixed pool.
@@ -170,7 +174,9 @@ class Cluster:
         ``shared_port=True`` puts every host behind **one** cluster-level
         :class:`~repro.fabric.link.LinkPort` — the PCIe-switch topology,
         where all hosts' config transfers contend FIFO on a single wire
-        instead of each owning a private one."""
+        instead of each owning a private one; ``tracer`` attaches one
+        :class:`~repro.obs.trace.Tracer` across every host (each shard
+        binds its host id into the spans it emits)."""
         port = None
         if shared_port:
             shared = resolve_link(link)
@@ -179,10 +185,11 @@ class Cluster:
             Host.from_registry(f"h{i}", dict(counts), depth=depth,
                                max_contexts=max_contexts, policy=host_policy,
                                cache_enabled=cache_enabled, link=link,
-                               overlap=overlap, port=port)
+                               overlap=overlap, port=port, tracer=tracer)
             for i in range(n_hosts)
         ]
-        return cls(hosts, policy=policy, seed=seed, sticky=sticky)
+        return cls(hosts, policy=policy, seed=seed, sticky=sticky,
+                   tracer=tracer)
 
     def dispatch(self, req: LaunchRequest) -> Host:
         host = self.router.route(req, now=req.arrival_time)

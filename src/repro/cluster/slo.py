@@ -18,7 +18,8 @@ per-launch :class:`~repro.sched.telemetry.LaunchRecord` logs — into one
   cluster run lands on the same plots as a single compiled program.
 
 Percentiles use deterministic linear interpolation (no numpy dependency at
-this layer, bit-stable across platforms).
+this layer, bit-stable across platforms) — the shared implementation lives
+in :mod:`repro.obs.metrics` and is re-exported here unchanged.
 """
 
 from __future__ import annotations
@@ -28,6 +29,7 @@ from typing import Mapping, Sequence
 
 from ..core.interp import Trace
 from ..core.roofline import RooflinePoint
+from ..obs.metrics import MetricsRegistry, percentile
 from ..sched.state_cache import elision_ratio
 from ..sched.telemetry import (
     LaunchRecord,
@@ -36,21 +38,13 @@ from ..sched.telemetry import (
     SchedulerReport,
 )
 
-
-def percentile(values: Sequence[float], q: float) -> float:
-    """The q-th percentile (0 ≤ q ≤ 100) by linear interpolation between
-    order statistics — numpy's default method, implemented deterministically."""
-    assert 0.0 <= q <= 100.0
-    if not values:
-        return 0.0
-    vals = sorted(values)
-    if len(vals) == 1:
-        return vals[0]
-    pos = (q / 100.0) * (len(vals) - 1)
-    lo = int(pos)
-    hi = min(lo + 1, len(vals) - 1)
-    frac = pos - lo
-    return vals[lo] * (1.0 - frac) + vals[hi] * frac
+__all__ = [
+    "ClusterReport",
+    "TenantSLO",
+    "TenantServing",
+    "build_report",
+    "percentile",
+]
 
 
 @dataclass(frozen=True)
@@ -147,6 +141,11 @@ class ClusterReport:
     # tenant -> token-level serving stats, attached by the closed-loop
     # bridge (empty for plain open-loop runs)
     serving: dict[str, TenantServing] = field(default_factory=dict)
+    # every host's scheduler registry absorbed under a host=<id> label plus
+    # the cluster-level series build_report adds; the traffic properties
+    # below are views over it (repro.obs.metrics), falling back to summing
+    # host reports when a report was assembled without a registry
+    metrics: MetricsRegistry | None = None
 
     def attach_serving(self, stats: Mapping[str, TenantServing]) -> None:
         """Fold bridged token-level stats in (``repro.bridge.report``)."""
@@ -154,13 +153,20 @@ class ClusterReport:
 
     # -- traffic -------------------------------------------------------------
 
+    def _total(self, name: str, fallback: float) -> float:
+        if self.metrics is not None and self.metrics.has(name):
+            return self.metrics.total(name)
+        return fallback
+
     @property
     def bytes_sent(self) -> int:
-        return sum(rep.bytes_sent for rep in self.hosts.values())
+        return int(self._total("sched.bytes_sent",
+                               sum(rep.bytes_sent for rep in self.hosts.values())))
 
     @property
     def bytes_elided(self) -> int:
-        return sum(rep.bytes_elided for rep in self.hosts.values())
+        return int(self._total("sched.bytes_elided",
+                               sum(rep.bytes_elided for rep in self.hosts.values())))
 
     @property
     def elision_ratio(self) -> float:
@@ -168,7 +174,8 @@ class ClusterReport:
 
     @property
     def preemptions(self) -> int:
-        return sum(rep.preemptions for rep in self.hosts.values())
+        return int(self._total("sched.preemptions",
+                               sum(rep.preemptions for rep in self.hosts.values())))
 
     @property
     def launches(self) -> int:
@@ -225,13 +232,16 @@ class ClusterReport:
 
     @property
     def config_cycles(self) -> float:
-        return sum(rep.config_cycles for rep in self.hosts.values())
+        return self._total("sched.config_cycles",
+                           sum(rep.config_cycles for rep in self.hosts.values()))
 
     @property
     def exposed_config_cycles(self) -> float:
         """Config cycles the cluster's hosts actually saw (T_set minus
         what the overlapped engines streamed behind compute)."""
-        return sum(rep.exposed_config_cycles for rep in self.hosts.values())
+        return self._total(
+            "sched.exposed_config_cycles",
+            sum(rep.exposed_config_cycles for rep in self.hosts.values()))
 
     @property
     def hidden_config_cycles(self) -> float:
@@ -301,6 +311,22 @@ def build_report(hosts, *, slo: Mapping[str, float] | None = None) -> ClusterRep
         for t, recs in sorted(by_tenant.items())
     }
     last_arrival = max([r.arrival for r in records], default=0.0)
+    # one cluster registry: every host's sched.* series folded in under a
+    # host=<id> label, plus the cluster-level tail/backlog series — so the
+    # traffic properties above and cluster dashboards read one store
+    metrics = MetricsRegistry()
+    for host_id, rep in reports.items():
+        if rep.metrics is not None:
+            metrics.absorb(rep.metrics, host=host_id)
+    for rec in records:
+        metrics.histogram("cluster.queue_delay",
+                          tenant=rec.tenant).observe(rec.queue_delay)
+        metrics.histogram("cluster.latency",
+                          tenant=rec.tenant).observe(rec.latency)
+    metrics.gauge("cluster.makespan").set(makespan)
+    for h in hosts:
+        metrics.gauge("cluster.port_wait",
+                      host=h.id).set(h.port_wait_estimate(now=last_arrival))
     return ClusterReport(
         makespan=makespan,
         hosts=reports,
@@ -311,4 +337,5 @@ def build_report(hosts, *, slo: Mapping[str, float] | None = None) -> ClusterRep
         port_wait={h.id: h.port_wait_estimate(now=last_arrival) for h in hosts},
         fabric_roofline=[h.fabric_roofline_point(makespan) for h in hosts],
         overlap_roofline=[h.overlap_roofline_point(makespan) for h in hosts],
+        metrics=metrics,
     )

@@ -11,7 +11,6 @@ behaviour is a compiler bug, not a speedup.
 from __future__ import annotations
 
 import copy
-import math
 from dataclasses import dataclass
 
 from . import passes
@@ -75,5 +74,6 @@ def speedup(results: dict[str, LevelResult], level: str = "both") -> float:
     return results["baseline"].trace.total_cycles / results[level].trace.total_cycles
 
 
-def geomean(xs: list[float]) -> float:
-    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+# one shared definition for every BENCH_* summary (re-exported here for
+# the historical call sites; non-positive terms collapse the mean to 0.0)
+from .stats import geomean  # noqa: E402

@@ -67,6 +67,9 @@ class OverlapPolicy:
         assert buffers >= 1, buffers
         self.mode = mode
         self.buffers = buffers
+        # observation-only hook (repro.obs.trace): the owning scheduler
+        # attaches its tracer so async staging decisions leave markers
+        self.tracer = None
         # per device: (total launches committed, trailing retirement times
         # in dispatch order). Transfer k's bank wait is bounded by the
         # retirement of launch k-buffers, so only the trailing window is
@@ -121,6 +124,12 @@ class OverlapPolicy:
         w = port.acquire(earliest, xfer.link_cycles, nbytes=xfer.nbytes,
                          tag=tag, mode=xfer.mode)
         release = h.end if asynchronous else max(h.end, w.end)
+        if self.tracer is not None and asynchronous:
+            # the host was released at descriptor enqueue; note how long
+            # the DMA then waited for a free shadow bank (double buffering)
+            self.tracer.instant("async-stage", h.end, lane="host",
+                                device=dev_id, tenant=tag,
+                                bank_wait=max(0.0, earliest - h.end))
         return StagePlan(
             host_start=h.start,
             host_busy=xfer.host_cycles,

@@ -152,6 +152,10 @@ class LinkPort:
         self.name = name
         self.res = Resource(name, kind="wire")
         self.log: list[Transfer] = []
+        # observation-only hook (repro.obs.trace): set by the first
+        # scheduler that attaches a tracer — always the *unbound* root, so
+        # a port shared by several hosts traces under one fabric lane
+        self.tracer = None
 
     @property
     def busy_until(self) -> float:
@@ -171,6 +175,9 @@ class LinkPort:
         xfer = Transfer(start=iv.start, end=iv.end, nbytes=int(nbytes),
                         tag=tag, mode=mode)
         self.log.append(xfer)
+        if self.tracer is not None and cycles > 0.0:
+            self.tracer.span(mode, "wire", iv.start, iv.end, lane=self.name,
+                             tenant=tag, nbytes=int(nbytes))
         return xfer
 
     # -- observables ---------------------------------------------------------

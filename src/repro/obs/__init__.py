@@ -1,0 +1,66 @@
+"""repro.obs — unified observability across every runtime layer.
+
+The paper's core claim is that config-bound systems are invisible to
+conventional profiling: the wall only appears once setup cycles are
+attributed separately from compute, exposed separately from hidden. The
+five runtime layers (sched, cluster, fabric, bridge, engine) each grew
+bespoke counters and no shared event stream; this package is the
+calibration substrate they now share:
+
+* :mod:`~repro.obs.trace` — a span-based :class:`Tracer`: every launch
+  emits nested spans (queued → config-issue → wire transfer →
+  config-done → compute → retire) on resource lanes matching the
+  engine's three-resource model, via observation-only hooks in
+  ``sched.Scheduler``, ``engine.OverlapPolicy``, ``fabric.LinkPort``,
+  ``cluster.Host`` / ``Cluster``, and ``bridge.ClosedLoopDriver``. A run
+  with a tracer attached is bit-identical to one without.
+* :mod:`~repro.obs.export` — the Chrome-trace / Perfetto exporter:
+  :func:`write_trace` dumps any scheduler, cluster, or closed-loop bridge
+  run as a ``trace.json`` loadable in ``chrome://tracing`` or
+  https://ui.perfetto.dev, with the attribution report and metrics
+  registry embedded as extra top-level keys for the CI gate.
+* :mod:`~repro.obs.attribution` — :func:`attribute` decomposes every
+  run's makespan into {exposed config, overlapped config, compute, host
+  occupancy, wire contention, queueing, idle} per resource lane, with a
+  hard conservation invariant (components sum to makespan on every lane)
+  — the first-class generalization of ``exposed_config_cycles``.
+* :mod:`~repro.obs.metrics` — :class:`MetricsRegistry`
+  (counters/gauges/histograms with label sets): the one place a number
+  lives. ``sched.telemetry`` / ``cluster.slo`` / ``bridge.report`` keep
+  their public APIs as thin views over it.
+"""
+
+from . import attribution, export, metrics, trace
+from .attribution import AttributionReport, LaneAttribution, attribute
+from .export import chrome_trace, validate_trace, write_trace
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    percentile,
+)
+from .trace import BoundTracer, CounterSample, Instant, Span, Tracer
+
+__all__ = [
+    "AttributionReport",
+    "BoundTracer",
+    "Counter",
+    "CounterSample",
+    "Gauge",
+    "Histogram",
+    "Instant",
+    "LaneAttribution",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "attribute",
+    "attribution",
+    "chrome_trace",
+    "export",
+    "metrics",
+    "percentile",
+    "trace",
+    "validate_trace",
+    "write_trace",
+]

@@ -48,6 +48,7 @@ from ..engine.overlap import OverlapPolicy
 from ..engine.resources import EngineResources, Resource
 from ..fabric.link import LinkModel, LinkPort, resolve_link
 from ..fabric.transport import plan_fields
+from ..obs.metrics import MetricsRegistry
 from .queue import AdmissionQueue, LaunchQueue, arrival_order
 from .state_cache import ConfigStateCache, WritePlan
 from .telemetry import (
@@ -95,7 +96,8 @@ class Device:
     """One pool member: an accelerator model + its cache and launch queue."""
 
     def __init__(self, dev_id: str, model: AcceleratorModel, *,
-                 depth: int = 2, max_contexts: int = 4):
+                 depth: int = 2, max_contexts: int = 4,
+                 metrics: MetricsRegistry | None = None):
         self.id = dev_id
         self.model = model
         self.cache = ConfigStateCache(
@@ -103,7 +105,7 @@ class Device:
             bytes_of=lambda name, value: model.bytes_per_field,
         )
         self.queue = LaunchQueue(model, depth=depth, name=dev_id)
-        self.telemetry = DeviceTelemetry(device=dev_id, model=model)
+        self.telemetry = DeviceTelemetry(dev_id, model, metrics=metrics)
 
     def config_cycles(self, n_fields: int) -> float:
         """Host cycles to write ``n_fields`` registers + issue the launch
@@ -130,12 +132,17 @@ class Scheduler:
         overlap: str = "serialized",
         staging_buffers: int = 2,
         port: LinkPort | None = None,
+        tracer=None,
     ):
         assert policy in POLICIES, policy
         if pool is None:
             pool = {name: model for name, model in REGISTRY.items()}
+        # one label-set registry per scheduler (repro.obs.metrics): every
+        # device's counters live here, and reports aggregate through it
+        self.metrics = MetricsRegistry()
         self.devices = [
-            Device(dev_id, model, depth=depth, max_contexts=max_contexts)
+            Device(dev_id, model, depth=depth, max_contexts=max_contexts,
+                   metrics=self.metrics)
             for dev_id, model in pool.items()
         ]
         self.policy = policy
@@ -166,6 +173,15 @@ class Scheduler:
         # overlapped = double-buffered async burst-DMA staging (§5.5's
         # runtime twin) — the host is released at descriptor enqueue
         self.overlap = OverlapPolicy(mode=overlap, buffers=staging_buffers)
+        # observation-only span hooks (repro.obs.trace): a Tracer or a
+        # host-bound view of one; never touches a clock, so traced runs
+        # are bit-identical to untraced ones. The (possibly shared) wire
+        # port gets the unbound root — its transfers belong to the fabric,
+        # not to whichever host happened to attach first
+        self.tracer = tracer
+        self.overlap.tracer = tracer
+        if tracer is not None and getattr(self.port, "tracer", None) is None:
+            self.port.tracer = getattr(tracer, "root", tracer)
         self._rr = itertools.count()
         self._placements: dict[str, dict[str, int]] = {}
         self._last_request: dict[str, LaunchRequest] = {}
@@ -282,6 +298,10 @@ class Scheduler:
                     dev.telemetry.record_preemption()
                     self.overlap.preempted(dev.id)
                     self._placements[victim.tenant][dev.id] -= 1
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "preempt", self.host, lane=f"compute[{dev.id}]",
+                            tenant=victim.tenant, by=req.tenant)
         regs = req.regs_for(dev.model)
         if self.cache_enabled:
             plan = dev.cache.dispatch(req.tenant, regs)
@@ -329,7 +349,14 @@ class Scheduler:
             deadline=req.deadline,
             config_done=stage.config_done,
             exposed_config=exposed,
+            host_cycles=stage.host_busy,
+            wire_start=stage.wire_start,
+            host_release=stage.host_release,
         )
+        if self.tracer is not None:
+            self._emit_spans(dev, req, stage, timing, issue,
+                             n_fields=len(plan.sent), config_cycles=cfg_c,
+                             exposed=exposed)
         self._last_request[req.tenant] = req
         self._placements.setdefault(req.tenant, {})
         self._placements[req.tenant][dev.id] = (
@@ -339,6 +366,40 @@ class Scheduler:
             # the victim re-enters placement behind its preemptor; each hop
             # strictly lowers the displaced priority, so this terminates
             self.dispatch(victim)
+
+    def _emit_spans(self, dev: Device, req: LaunchRequest, stage, timing,
+                    issue: float, *, n_fields: int, config_cycles: float,
+                    exposed: float) -> None:
+        """One launch's span taxonomy (repro.obs.trace): queued →
+        config-issue → [wire-captive] → [launch-stall] on the host lane,
+        config-done → compute on the device lane, launch on the tenant
+        lane. The wire-transfer span itself is emitted by the LinkPort
+        (the transfer belongs to the fabric, shared ports included)."""
+        tr = self.tracer
+        tenant_lane = f"tenant[{req.tenant}]"
+        h_end = stage.host_start + stage.host_busy
+        if issue > req.arrival_time:
+            tr.span("queued", "queueing", req.arrival_time, issue,
+                    lane=tenant_lane, device=dev.id)
+        tr.span("config-issue", "config", stage.host_start, h_end,
+                lane="host", tenant=req.tenant, device=dev.id,
+                fields=n_fields)
+        if stage.host_release > h_end:
+            tr.span("wire-captive", "config", h_end, stage.host_release,
+                    lane="host", tenant=req.tenant, device=dev.id)
+        if timing.stall > 0.0:
+            tr.span("launch-stall", "stall", stage.host_release,
+                    stage.host_release + timing.stall, lane="host",
+                    tenant=req.tenant, device=dev.id)
+        tr.instant("config-done", stage.config_done,
+                   lane=f"compute[{dev.id}]", tenant=req.tenant)
+        tr.span("compute", "compute", timing.start, timing.end,
+                lane=f"compute[{dev.id}]", tenant=req.tenant,
+                ops=dev.model.macro_ops(req.regs_for(dev.model)))
+        tr.span("launch", "launch", issue, timing.end, lane=tenant_lane,
+                device=dev.id, config_cycles=config_cycles,
+                exposed_config=exposed,
+                asynchronous=stage.asynchronous)
 
     def invalidate(self, tenant: str | None = None) -> None:
         """Clobber cached device state (the runtime ``effects="all"``)."""
@@ -381,6 +442,7 @@ class Scheduler:
 
     def finish(self) -> SchedulerReport:
         makespan = max([self.host, *(d.queue.device_free for d in self.devices)])
+        self.metrics.gauge("sched.makespan").set(makespan)
         return SchedulerReport(
             makespan=makespan,
             devices={d.id: d.telemetry for d in self.devices},
@@ -390,6 +452,7 @@ class Scheduler:
             resources={name: ResourceTelemetry.from_resource(res, makespan)
                        for name, res in self.res.all().items()},
             overlap_mode=self.overlap.mode,
+            metrics=self.metrics,
         )
 
 

@@ -15,21 +15,19 @@ from dataclasses import dataclass, field
 from ..core.accelerators import AcceleratorModel
 from ..core.interp import Invocation, Trace
 from ..core.roofline import RooflinePoint
+from ..core.stats import geomean  # the one shared definition, re-exported
 from ..engine.resources import overlap_cycles
+from ..obs.metrics import MetricsRegistry
 from .state_cache import CacheStats, elision_ratio
 
-
-def geomean(values) -> float:
-    """Geometric mean; 0.0 for an empty sequence or any non-positive term —
-    a collapsed cell must drag the summary to zero, not vanish from it.
-    The one definition every ``BENCH_*.json`` summary shares."""
-    vals = list(values)
-    if not vals or any(v <= 0.0 for v in vals):
-        return 0.0
-    prod = 1.0
-    for v in vals:
-        prod *= v
-    return prod ** (1.0 / len(vals))
+__all__ = [
+    "DeviceTelemetry",
+    "LaunchRecord",
+    "LinkTelemetry",
+    "ResourceTelemetry",
+    "SchedulerReport",
+    "geomean",
+]
 
 
 @dataclass(frozen=True)
@@ -59,6 +57,16 @@ class LaunchRecord:
     # the host instruction time plus wire cycles compute failed to cover)
     config_done: float = 0.0
     exposed_config: float = 0.0
+    # attribution substrate (repro.obs): how the launch's T_set split
+    # across the engine lanes — host instruction cycles, where its wire
+    # transfer began (== its LinkPort reservation, so obs.attribution can
+    # match the two exactly), when the host was released (captive through
+    # the wire when serialized, descriptor enqueue when async), and how
+    # long the host then blocked on the device (ring-full / sequential)
+    host_cycles: float = 0.0
+    wire_start: float = 0.0
+    host_release: float = 0.0
+    stall: float = 0.0
 
     @property
     def queue_delay(self) -> float:
@@ -84,24 +92,84 @@ class LaunchRecord:
         return self.config_cycles - self.exposed_config
 
 
-@dataclass
 class DeviceTelemetry:
-    """Everything observed about one device instance during a run."""
+    """Everything observed about one device instance during a run.
 
-    device: str
-    model: AcceleratorModel
-    invocations: list[Invocation] = field(default_factory=list)
-    launch_log: list[LaunchRecord] = field(default_factory=list)
-    config_cycles: float = 0.0  # host cycles writing this device's registers
-    exposed_config_cycles: float = 0.0  # ... the part overlap failed to hide
-    stall_cycles: float = 0.0  # host cycles blocked on this device
-    busy_cycles: float = 0.0
-    total_ops: int = 0
-    bytes_sent: int = 0
-    bytes_elided: int = 0
-    launches: int = 0
-    preemptions: int = 0  # staged launches cancelled by higher priority
-    preempted_config_cycles: float = 0.0  # host work wasted on cancelled launches
+    The counters live in a :class:`~repro.obs.metrics.MetricsRegistry`
+    (one per scheduler, shared across its devices, labelled ``device=``);
+    the historical scalar fields (``config_cycles``, ``bytes_sent``, ...)
+    are properties — thin views over the registry — so every existing
+    report and benchmark reads identically while the registry is what
+    exports, folds across hosts, and feeds the obs layer."""
+
+    _COUNTERS = (
+        ("config_cycles", "sched.config_cycles"),
+        ("exposed_config_cycles", "sched.exposed_config_cycles"),
+        ("stall_cycles", "sched.stall_cycles"),
+        ("busy_cycles", "sched.busy_cycles"),
+        ("total_ops", "sched.total_ops"),
+        ("bytes_sent", "sched.bytes_sent"),
+        ("bytes_elided", "sched.bytes_elided"),
+        ("launches", "sched.launches"),
+        ("preemptions", "sched.preemptions"),
+        ("preempted_config_cycles", "sched.preempted_config_cycles"),
+    )
+
+    def __init__(self, device: str, model: AcceleratorModel,
+                 metrics: MetricsRegistry | None = None):
+        self.device = device
+        self.model = model
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.invocations: list[Invocation] = []
+        self.launch_log: list[LaunchRecord] = []
+        # launches cancelled before starting: their device-side accounting
+        # is rolled back, but their host/wire occupancy happened — the obs
+        # attribution classifies those cycles as preempted, not idle
+        self.preempted_log: list[LaunchRecord] = []
+        self._c = {attr: self.metrics.counter(name, device=device)
+                   for attr, name in self._COUNTERS}
+
+    # registry views: the historical scalar fields, now reading the shared
+    # registry (int-valued counters surface as ints, as before)
+    @property
+    def config_cycles(self) -> float:
+        return self._c["config_cycles"].value
+
+    @property
+    def exposed_config_cycles(self) -> float:
+        return self._c["exposed_config_cycles"].value
+
+    @property
+    def stall_cycles(self) -> float:
+        return self._c["stall_cycles"].value
+
+    @property
+    def busy_cycles(self) -> float:
+        return self._c["busy_cycles"].value
+
+    @property
+    def total_ops(self) -> int:
+        return int(self._c["total_ops"].value)
+
+    @property
+    def bytes_sent(self) -> int:
+        return int(self._c["bytes_sent"].value)
+
+    @property
+    def bytes_elided(self) -> int:
+        return int(self._c["bytes_elided"].value)
+
+    @property
+    def launches(self) -> int:
+        return int(self._c["launches"].value)
+
+    @property
+    def preemptions(self) -> int:
+        return int(self._c["preemptions"].value)
+
+    @property
+    def preempted_config_cycles(self) -> float:
+        return self._c["preempted_config_cycles"].value
 
     def record_launch(
         self,
@@ -120,9 +188,14 @@ class DeviceTelemetry:
         deadline: float | None = None,
         config_done: float | None = None,
         exposed_config: float | None = None,
+        host_cycles: float | None = None,
+        wire_start: float | None = None,
+        host_release: float | None = None,
     ) -> None:
         if exposed_config is None:
             exposed_config = config_cycles  # serialized: nothing hides
+        if config_done is None:
+            config_done = (issue if issue is not None else start) + config_cycles
         self.invocations.append(Invocation(self.device, dict(regs), start, end))
         self.launch_log.append(LaunchRecord(
             tenant=tenant,
@@ -137,34 +210,45 @@ class DeviceTelemetry:
             priority=priority,
             deadline=deadline,
             bytes_elided=bytes_elided,
-            config_done=(config_done if config_done is not None
-                         else (issue if issue is not None else start)
-                         + config_cycles),
+            config_done=config_done,
             exposed_config=exposed_config,
+            # CSR semantics when the caller doesn't split T_set: all host
+            # time, a zero-length wire interval at the config-done edge,
+            # host captive through it — attribution still conserves
+            host_cycles=(host_cycles if host_cycles is not None
+                         else config_cycles),
+            wire_start=wire_start if wire_start is not None else config_done,
+            host_release=(host_release if host_release is not None
+                          else config_done),
+            stall=stall,
         ))
-        self.busy_cycles += end - start
-        self.total_ops += ops
-        self.config_cycles += config_cycles
-        self.exposed_config_cycles += exposed_config
-        self.stall_cycles += stall
-        self.bytes_sent += bytes_sent
-        self.bytes_elided += bytes_elided
-        self.launches += 1
+        c = self._c
+        c["busy_cycles"].add(end - start)
+        c["total_ops"].add(ops)
+        c["config_cycles"].add(config_cycles)
+        c["exposed_config_cycles"].add(exposed_config)
+        c["stall_cycles"].add(stall)
+        c["bytes_sent"].add(bytes_sent)
+        c["bytes_elided"].add(bytes_elided)
+        c["launches"].inc()
 
     def record_preemption(self) -> None:
         """Undo the newest launch's *device-side* accounting: the staged
         macro-op never ran. Its config writes stay counted — that host work
         happened and was wasted (``exposed_config_cycles`` keeps them for
         the same reason), which is exactly what the preemption counters
-        should expose."""
+        should expose. The popped record moves to ``preempted_log`` so the
+        obs attribution can still classify its host/wire occupancy."""
         assert self.invocations, "preemption with no recorded launch"
         inv = self.invocations.pop()
         rec = self.launch_log.pop()
-        self.busy_cycles -= inv.end - inv.start
-        self.total_ops -= rec.ops
-        self.launches -= 1
-        self.preemptions += 1
-        self.preempted_config_cycles += rec.config_cycles
+        self.preempted_log.append(rec)
+        c = self._c
+        c["busy_cycles"].add(-(inv.end - inv.start))
+        c["total_ops"].add(-rec.ops)
+        c["launches"].add(-1)
+        c["preemptions"].inc()
+        c["preempted_config_cycles"].add(rec.config_cycles)
 
     # -- derived -------------------------------------------------------------
 
@@ -311,31 +395,40 @@ class SchedulerReport:
     # engine occupancy: host / wire / per-device compute busy timelines
     resources: dict[str, ResourceTelemetry] = field(default_factory=dict)
     overlap_mode: str = "serialized"
+    # the scheduler's label-set registry (repro.obs.metrics): the aggregate
+    # properties below are views over it; None only for hand-built reports
+    metrics: MetricsRegistry | None = None
+
+    def _total(self, name: str, fallback) -> float:
+        if self.metrics is not None and self.metrics.has(name):
+            return self.metrics.total(name)
+        return sum(fallback(d) for d in self.devices.values())
 
     @property
     def bytes_sent(self) -> int:
-        return sum(d.bytes_sent for d in self.devices.values())
+        return int(self._total("sched.bytes_sent", lambda d: d.bytes_sent))
 
     @property
     def bytes_elided(self) -> int:
-        return sum(d.bytes_elided for d in self.devices.values())
+        return int(self._total("sched.bytes_elided", lambda d: d.bytes_elided))
 
     @property
     def preemptions(self) -> int:
-        return sum(d.preemptions for d in self.devices.values())
+        return int(self._total("sched.preemptions", lambda d: d.preemptions))
 
     @property
     def config_cycles(self) -> float:
         """Host cycles this run spent writing configuration — on one host
         these serialize through a single control thread (the config port)."""
-        return sum(d.config_cycles for d in self.devices.values())
+        return self._total("sched.config_cycles", lambda d: d.config_cycles)
 
     @property
     def exposed_config_cycles(self) -> float:
         """Config cycles the host actually saw: T_set minus whatever the
         overlapped engine streamed behind compute. Serialized runs expose
         everything (``exposed == config_cycles``)."""
-        return sum(d.exposed_config_cycles for d in self.devices.values())
+        return self._total("sched.exposed_config_cycles",
+                           lambda d: d.exposed_config_cycles)
 
     @property
     def hidden_config_cycles(self) -> float:

@@ -1,0 +1,357 @@
+"""repro.obs: metrics-registry semantics, tracer neutrality, cycle
+attribution (the conservation invariant, property-tested), the exposed-
+config reproduction pin, and the golden chrome-trace schema."""
+
+import dataclasses
+import json
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import Cluster, Host, percentile as cluster_percentile
+from repro.obs import (
+    MetricsRegistry,
+    Tracer,
+    attribute,
+    chrome_trace,
+    percentile,
+    validate_trace,
+    write_trace,
+)
+from repro.sched import LaunchRequest, Scheduler
+
+# ------------------------------------------------------------- metrics
+
+
+def test_counter_gauge_histogram_semantics():
+    m = MetricsRegistry()
+    m.counter("c", device="d0").add(3.0)
+    m.counter("c", device="d0").add(2.0)
+    m.counter("c", device="d1").inc()
+    assert m.counter("c", device="d0").value == 5.0
+    assert m.total("c") == 6.0
+    assert m.total("c", device="d1") == 1.0
+
+    m.gauge("g").set(7.0)
+    m.gauge("g").set(4.0)  # last write wins
+    assert m.gauge("g").value == 4.0
+
+    h = m.histogram("h", tenant="t0")
+    h.extend([1.0, 2.0, 3.0, 4.0])
+    assert h.count == 4 and h.mean == 2.5
+    assert m.samples("h") == [1.0, 2.0, 3.0, 4.0]
+
+
+def test_counter_rollback_accepts_negative_deltas():
+    m = MetricsRegistry()
+    c = m.counter("sched.busy_cycles", device="d0")
+    c.add(100.0)
+    c.add(-40.0)  # preemption rollback is a first-class event
+    assert c.value == 60.0
+
+
+def test_label_sets_are_order_insensitive_and_kind_checked():
+    m = MetricsRegistry()
+    a = m.counter("x", host="h0", device="d0")
+    b = m.counter("x", device="d0", host="h0")
+    assert a is b
+    with pytest.raises(AssertionError):
+        m.gauge("x", host="h0", device="d0")
+
+
+def test_absorb_relabels_and_folds():
+    child = MetricsRegistry()
+    child.counter("n", device="d0").add(2.0)
+    child.gauge("mk").set(9.0)
+    child.histogram("lat").extend([1.0, 3.0])
+    parent = MetricsRegistry()
+    parent.counter("n", device="d0", host="h1").add(1.0)
+    parent.absorb(child, host="h0")
+    assert parent.total("n") == 3.0
+    assert parent.total("n", host="h0") == 2.0
+    assert parent.gauge("mk", host="h0").value == 9.0
+    assert parent.samples("lat", host="h0") == [1.0, 3.0]
+    rows = parent.collect()
+    assert all(set(r) >= {"name", "kind", "labels"} for r in rows)
+
+
+def test_percentile_is_the_shared_implementation():
+    # the cluster layer re-exports the obs implementation — one definition
+    assert cluster_percentile is percentile
+    vals = [5.0, 1.0, 9.0, 3.0]
+    assert percentile(vals, 0) == 1.0
+    assert percentile(vals, 100) == 9.0
+    assert percentile(vals, 50) == 4.0  # linear interpolation between 3 and 5
+
+
+def test_unified_geomean_definition():
+    # both historical entry points resolve to core.stats.geomean
+    from repro.core.evaluate import geomean as core_geomean
+    from repro.core.stats import geomean
+    from repro.sched import geomean as sched_geomean
+
+    assert core_geomean is geomean and sched_geomean is geomean
+    assert geomean([2.0, 8.0]) == pytest.approx(4.0)
+    assert geomean([]) == 0.0 and geomean([1.0, 0.0]) == 0.0
+
+
+# -------------------------------------------------- tracer / conservation
+
+
+def _stream(seed_reqs):
+    return [LaunchRequest(t, dims, extra, accel=accel, arrival_time=at)
+            for t, dims, extra, accel, at in seed_reqs]
+
+
+@st.composite
+def obs_streams(draw):
+    """Mixed-pool request streams in the style of test_engine's generator:
+    random arrivals, tile sizes, and write-plan shapes."""
+    reqs, t = [], 0.0
+    for i in range(draw(st.integers(2, 16))):
+        t += float(draw(st.integers(0, 150)))
+        dims = tuple(8 * draw(st.integers(1, 5)) for _ in range(3))
+        nfields = draw(st.integers(0, 32))
+        extra = {f"p{j}": draw(st.integers(0, 3)) * 64 + j
+                 for j in range(nfields)}
+        accel = draw(st.sampled_from(["opengemm", "gemmini"]))
+        reqs.append((f"t{draw(st.integers(0, 2))}", dims, extra, accel, t))
+    return reqs
+
+
+@settings(max_examples=25, deadline=None)
+@given(obs_streams(), st.sampled_from(["csr", "noc", "pcie"]),
+       st.sampled_from(["serialized", "overlapped"]))
+def test_attribution_conserves_cycles_on_every_lane(seed_reqs, link, mode):
+    """The hard invariant: per lane, components (idle included) sum to the
+    makespan — no gap, no double-booking — under both overlap modes and
+    every link class."""
+    s = Scheduler.from_registry({"opengemm": 1, "gemmini": 1},
+                                link=link, overlap=mode)
+    rep = s.run_open_loop(_stream(seed_reqs))
+    att = attribute(rep).check(tolerance=1e-9)
+    assert att.makespan == rep.makespan
+    for lane in att.lanes.values():
+        assert lane.residual <= max(1e-9 * lane.makespan, 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(obs_streams(), st.sampled_from(["noc", "pcie"]),
+       st.sampled_from(["serialized", "overlapped"]))
+def test_attribution_reproduces_exposed_config_exactly(seed_reqs, link, mode):
+    """attribution.exposed_config must equal the telemetry counter on
+    preemption-free runs — same floats, same order, bit-exact."""
+    s = Scheduler.from_registry({"opengemm": 1, "gemmini": 1},
+                                link=link, overlap=mode)
+    rep = s.run_open_loop(_stream(seed_reqs))
+    assert rep.preemptions == 0
+    att = attribute(rep)
+    assert att.exposed_config == rep.exposed_config_cycles
+    if mode == "serialized":
+        # a captive host exposes all of T_set: exposed == total config
+        assert att.exposed_config == rep.config_cycles
+        assert att.summary["overlapped_config"] == 0.0
+
+
+def test_tracer_never_perturbs_timing():
+    """A traced run is bit-identical to an untraced one — the property the
+    golden-trace pin depends on."""
+    reqs = [LaunchRequest(f"t{i % 2}", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(12)},
+                          arrival_time=30.0 * i) for i in range(8)]
+
+    def run(tracer):
+        s = Scheduler.from_registry({"opengemm": 1}, link="noc",
+                                    overlap="overlapped", tracer=tracer)
+        return s.run_open_loop(list(reqs))
+
+    bare, traced = run(None), run(Tracer())
+    assert bare.makespan == traced.makespan
+    assert [r.end for r in bare.launch_log()] == \
+           [r.end for r in traced.launch_log()]
+
+
+def test_cluster_attribution_covers_shared_port():
+    reqs = [LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(16)},
+                          arrival_time=25.0 * i) for i in range(12)]
+    cl = Cluster.uniform(2, {"opengemm": 1}, link="pcie",
+                         overlap="overlapped", shared_port=True)
+    rep = cl.run(list(reqs))
+    att = attribute(rep).check(tolerance=1e-9)
+    # the shared wire appears once, cluster-wide, not once per host
+    shared = [name for name in att.lanes if name.endswith(":shared")]
+    assert shared == ["cfg[pcie]:shared"]
+    assert att.exposed_config == rep.exposed_config_cycles
+
+
+def test_preempted_launches_stay_conserved():
+    """A preemption leaves host/wire side effects that the attribution must
+    still classify (preempted_config / preempted_transfer) — conservation
+    holds through the rollback."""
+    s = Scheduler.from_registry({"opengemm": 1}, link="noc", depth=1)
+    reqs = [LaunchRequest("bulk", (40, 40, 40),
+                          {f"p{j}": j for j in range(24)},
+                          arrival_time=0.0),
+            LaunchRequest("bulk2", (40, 40, 40),
+                          {f"p{j}": 64 + j for j in range(24)},
+                          arrival_time=1.0),
+            LaunchRequest("vip", (8, 8, 8), {"p0": 1}, priority=5,
+                          arrival_time=2.0)]
+    rep = s.run_open_loop(reqs)
+    att = attribute(rep).check()
+    if rep.preemptions:
+        assert sum(l.components.get("preempted_config", 0.0) +
+                   l.components.get("preempted_transfer", 0.0)
+                   for l in att.lanes.values()) >= 0.0
+
+
+# ------------------------------------------------------------ golden trace
+
+
+GOLDEN_REQS = [("a", 0.0), ("b", 10.0), ("a", 200.0), ("b", 260.0)]
+
+
+def _golden_tracer():
+    tr = Tracer()
+    s = Scheduler.from_registry({"opengemm": 1}, link="noc",
+                                overlap="overlapped", tracer=tr)
+    reqs = [LaunchRequest(t, (16, 16, 16),
+                          {f"p{j}": int(at) + j for j in range(8)},
+                          arrival_time=at) for t, at in GOLDEN_REQS]
+    rep = s.run_open_loop(reqs)
+    return tr, rep
+
+
+def test_golden_trace_schema_and_lanes():
+    tr, rep = _golden_tracer()
+    doc = chrome_trace(tr)
+    assert validate_trace(doc) == []
+    assert doc["displayTimeUnit"] == "ms"
+    # pinned lane vocabulary: the three-resource model plus tenant lanes
+    assert tr.lanes() == ["cfg[noc]", "host", "compute[opengemm:0]",
+                          "tenant[a]", "tenant[b]"]
+    # pinned span taxonomy on the host lane
+    host_names = {s.name for s in tr.spans_on("host")}
+    assert "config-issue" in host_names
+    # every launch leaves exactly one compute span and one launch span
+    assert len(tr.spans_on("compute[opengemm:0]")) == len(GOLDEN_REQS)
+    launches = [s for s in tr.spans if s.cat == "launch"]
+    assert len(launches) == len(GOLDEN_REQS)
+    # spans never exceed the makespan and the first issue is pinned
+    assert max(s.end for s in tr.spans) <= rep.makespan
+    first = min(s.start for s in tr.spans_on("host"))
+    assert first == 0.0
+    # exported events: metadata first, then ts-ordered
+    events = doc["traceEvents"]
+    body = [e for e in events if e["ph"] != "M"]
+    assert [e["ts"] for e in body] == sorted(e["ts"] for e in body)
+    # config-done instants mark the config-complete edge on compute lanes
+    assert sum(1 for i in tr.instants if i.name == "config-done") == \
+           len(GOLDEN_REQS)
+
+
+def test_golden_trace_is_deterministic():
+    a, _ = _golden_tracer()
+    b, _ = _golden_tracer()
+    assert chrome_trace(a) == chrome_trace(b)
+
+
+def test_write_trace_embeds_attribution_and_metrics(tmp_path):
+    tr, rep = _golden_tracer()
+    path = tmp_path / "trace.json"
+    att = attribute(rep).check()
+    doc = write_trace(tr, str(path), attribution=att, metrics=rep.metrics)
+    loaded = json.loads(path.read_text())
+    assert loaded == doc
+    assert loaded["attribution"]["max_residual"] <= 1e-3
+    assert loaded["attribution"]["exposed_config"] == \
+           loaded["attribution"]["reported_exposed_config"]
+    names = {row["name"] for row in loaded["metrics"]}
+    assert "sched.exposed_config_cycles" in names
+
+
+# ----------------------------------------------------- registry-backed views
+
+
+def test_scheduler_report_views_are_registry_backed():
+    s = Scheduler.from_registry({"opengemm": 1}, link="noc")
+    reqs = [LaunchRequest("t0", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(8)},
+                          arrival_time=20.0 * i) for i in range(5)]
+    rep = s.run_open_loop(reqs)
+    assert rep.metrics is s.metrics
+    assert rep.exposed_config_cycles == \
+           s.metrics.total("sched.exposed_config_cycles")
+    assert rep.bytes_sent == int(s.metrics.total("sched.bytes_sent"))
+    assert s.metrics.gauge("sched.makespan").value == rep.makespan
+
+
+def test_cluster_report_folds_host_registries():
+    reqs = [LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(8)},
+                          arrival_time=20.0 * i) for i in range(9)]
+    cl = Cluster.uniform(2, {"opengemm": 1}, link="noc")
+    rep = cl.run(list(reqs))
+    m = rep.metrics
+    assert m is not None
+    # per-host series exist and sum to the cluster view
+    per_host = sum(m.total("sched.bytes_sent", host=h) for h in rep.hosts)
+    assert rep.bytes_sent == int(per_host)
+    # tail histograms carry every launch
+    assert len(m.samples("cluster.latency")) == len(rep.records)
+    assert m.gauge("cluster.makespan").value == rep.makespan
+
+
+# --------------------------------------------------------- closed-loop bridge
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.configs import get
+    from repro.models.model import Model
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), remat="none")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params, ServingEngine.compile_decode(model)
+
+
+def test_bridge_trace_end_to_end(small_model, tmp_path):
+    """The acceptance scenario: a closed-loop serving run exports a
+    Perfetto-loadable trace whose host/wire/compute lanes satisfy the
+    conservation invariant and reproduce exposed_config_cycles."""
+    from repro.bridge import ClosedLoopDriver, TenantEngine
+    from repro.serving import Request, ServingEngine
+
+    model, params, decode_fn = small_model
+    tenants = []
+    for i in range(2):
+        eng = ServingEngine(model, params, max_slots=4, max_len=64,
+                            decode_fn=decode_fn)
+        eng.submit(Request(uid=0, prompt=[3 + i, 5], max_new_tokens=3))
+        tenants.append(TenantEngine(f"t{i}", eng, accel="opengemm",
+                                    slo_cycles=2_000.0))
+    tracer = Tracer()
+    cluster = Cluster.uniform(1, {"opengemm": 1}, sticky=True, link="noc",
+                              overlap="overlapped", tracer=tracer)
+    rep = ClosedLoopDriver(tenants, cluster).run()
+
+    att = attribute(rep).check(tolerance=1e-9)
+    assert att.exposed_config == rep.cluster.exposed_config_cycles
+    lanes = tracer.lanes()
+    assert any(l.startswith("cfg[") for l in lanes)
+    assert any(l.startswith("compute[") for l in lanes)
+    assert "host" in lanes
+    assert any(l.startswith("step[") for l in lanes)
+
+    path = tmp_path / "bridge_trace.json"
+    doc = write_trace(tracer, str(path), attribution=att,
+                      metrics=rep.metrics)
+    assert validate_trace(doc) == []
+    # bridge.* series landed beside the sched.* ones in one registry
+    assert rep.metrics.total("bridge.tokens") == rep.tokens
+    assert rep.overlap_summary()["config_cycles"] == \
+        pytest.approx(rep.metrics.total("bridge.config_cycles"))
