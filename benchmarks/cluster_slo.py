@@ -121,22 +121,26 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+try:
+    from benchmarks.trace_util import export_trace as _export
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from trace_util import export_trace as _export
+
+
 def export_trace(path: str, smoke: bool) -> None:
     """Re-run one representative cell (affinity router, 2 hosts, lowest
     swept rate) with a tracer attached and export the Perfetto trace with
     its conservation-checked cycle attribution embedded."""
-    from repro.obs import Tracer, attribute, write_trace
-
     profiles = tenant_mix()
     horizon = 60_000.0 if smoke else 200_000.0
     requests = generate(profiles, rate=1 / 20, horizon=horizon, seed=7)
-    tracer = Tracer()
-    cluster = Cluster.uniform(2, {"gemmini": 1, "opengemm": 1},
-                              policy="affinity", tracer=tracer)
-    rep = cluster.run(list(requests), slo=slo_targets(profiles))
-    write_trace(tracer, path, attribution=attribute(rep).check(),
-                metrics=rep.metrics)
-    print(f"wrote {path}")
+
+    def scenario(tracer):
+        cluster = Cluster.uniform(2, {"gemmini": 1, "opengemm": 1},
+                                  policy="affinity", tracer=tracer)
+        return cluster.run(list(requests), slo=slo_targets(profiles))
+
+    _export(path, scenario)
 
 
 def main() -> None:

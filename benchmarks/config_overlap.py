@@ -166,19 +166,23 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+try:
+    from benchmarks.trace_util import export_trace as _export
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from trace_util import export_trace as _export
+
+
 def export_trace(path: str, smoke: bool) -> None:
     """Re-run the sweep's most overlap-sensitive cell (PCIe, mid intensity,
     overlapped) instrumented and export its trace + cycle attribution."""
-    from repro.obs import Tracer, attribute, write_trace
-
     n = 8 if smoke else 24
-    tracer = Tracer()
-    s = Scheduler.from_registry({"opengemm": 1}, link="pcie",
-                                overlap="overlapped", tracer=tracer)
-    rep = s.run(stream(INTENSITIES["mid"], n))
-    write_trace(tracer, path, attribution=attribute(rep).check(),
-                metrics=rep.metrics)
-    print(f"wrote {path}")
+
+    def scenario(tracer):
+        s = Scheduler.from_registry({"opengemm": 1}, link="pcie",
+                                    overlap="overlapped", tracer=tracer)
+        return s.run(stream(INTENSITIES["mid"], n))
+
+    _export(path, scenario)
 
 
 def main() -> None:

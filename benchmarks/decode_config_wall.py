@@ -10,6 +10,7 @@ Figure 4's rightward escape from the configuration-bound region.
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 import time
 
@@ -18,6 +19,11 @@ import jax.numpy as jnp
 
 from repro.configs import get
 from repro.models.model import Model
+
+try:
+    from benchmarks.trace_util import export_trace as _export
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from trace_util import export_trace as _export
 
 
 def run(arch: str = "qwen2-0.5b", batch: int = 4, cache_len: int = 128,
@@ -62,12 +68,41 @@ def run(arch: str = "qwen2-0.5b", batch: int = 4, cache_len: int = 128,
     return rows
 
 
+def export_trace(path: str) -> None:
+    """Instrumented simulator analogue of the wall-clock sweep: a
+    single-token decode stream is one tiny macro-op behind a full
+    per-launch config (k=1, deep inside the config-bound region) — the
+    trace shows its host lane captive in config writes, exactly the shape
+    the tokens-per-launch fusion escapes."""
+    from repro.sched import LaunchRequest, Scheduler
+
+    def scenario(tracer):
+        s = Scheduler.from_registry({"opengemm": 1}, link="noc",
+                                    tracer=tracer)
+        reqs = [
+            LaunchRequest("decode", (8, 8, 8),
+                          {f"pos{j}": 32 * i + j for j in range(12)},
+                          arrival_time=0.0)
+            for i in range(24)
+        ]
+        return s.run_open_loop(reqs)
+
+    _export(path, scenario)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-out", default=None,
+                    help="export an instrumented simulator analogue of "
+                         "the single-token (k=1) decode stream")
+    args = ap.parse_args()
     print("# decode config wall: tokens-per-launch sweep (reduced qwen2-0.5b)")
     print("tokens_per_launch,total_s,tok_per_s,us_per_token")
     for r in run():
         print(f"{r['tokens_per_launch']},{r['total_s']:.4f},"
               f"{r['tok_per_s']:.1f},{r['us_per_token']:.1f}")
+    if args.trace_out:
+        export_trace(args.trace_out)
 
 
 if __name__ == "__main__":

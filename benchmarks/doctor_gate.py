@@ -1,0 +1,96 @@
+"""CI gate: the config-wall doctor must classify the overlap sweep right.
+
+``BENCH_config_overlap.json`` is the repo's cleanest ground truth about
+the configuration wall: every serialized cell keeps the host captive
+through its transfers (the paper's Eq. 4 worst case), and every
+overlapped fabric cell hides wire time behind compute. The doctor's
+classification rule (:func:`repro.obs.diagnose.classify_cell`) is gated
+against exactly that:
+
+* every **serialized** cell classifies **config-bound** — even the huge
+  intensities where compute busies 98% of the run, because the exposed
+  T_set share stays ≥ 10%;
+* every **overlapped fabric** cell has *moved toward compute-bound*:
+  its overlap-adjusted ridge ``I_OC = P_peak / BW_cfg_exposed`` strictly
+  decreased (the config-bound region shrank) and part of its T_set is no
+  longer host-visible (``exposed_fraction < 1``);
+* **CSR** cells are mode-identical (a core-local port has no wire to
+  hide), so both modes classify the same.
+
+Run after the bench: ``python benchmarks/doctor_gate.py [--dir .]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs.diagnose import classify_cell  # noqa: E402
+
+FABRIC = ("noc", "noc2", "pcie")
+
+
+def check(doc: dict) -> list[str]:
+    problems: list[str] = []
+    for cell in doc["cells"]:
+        tag = f"{cell['link']}/{cell['intensity']}"
+        ser = classify_cell(cell["serialized"])
+        ov = classify_cell(cell["overlapped"])
+        if ser.label != "config_bound":
+            problems.append(
+                f"{tag}: serialized classified {ser.label} "
+                f"(exposed share {ser.exposed_share:.3f}) — every "
+                f"serialized cell must be config_bound")
+        if cell["link"] in FABRIC:
+            ridge_ser = cell["serialized"]["ridge_i_oc"]
+            ridge_ov = cell["overlapped"]["ridge_i_oc"]
+            if not ridge_ov < ridge_ser:
+                problems.append(
+                    f"{tag}: overlapped ridge {ridge_ov:.1f} did not drop "
+                    f"below serialized {ridge_ser:.1f}")
+            if not ov.exposed_fraction < 1.0:
+                problems.append(
+                    f"{tag}: overlapped exposed_fraction "
+                    f"{ov.exposed_fraction:.3f} — nothing hidden")
+        else:
+            if cell["serialized"] != cell["overlapped"]:
+                problems.append(f"{tag}: csr cells differ across modes")
+            if ser.label != ov.label:
+                problems.append(
+                    f"{tag}: csr classification differs across modes "
+                    f"({ser.label} vs {ov.label})")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".",
+                    help="directory holding BENCH_config_overlap.json")
+    args = ap.parse_args()
+    path = os.path.join(args.dir, "BENCH_config_overlap.json")
+    if not os.path.exists(path):
+        print(f"doctor_gate: {path} missing — run "
+              f"benchmarks/config_overlap.py first", file=sys.stderr)
+        return 1
+    with open(path) as f:
+        doc = json.load(f)
+    problems = check(doc)
+    n = len(doc["cells"])
+    if problems:
+        print(f"doctor_gate: FAIL ({len(problems)} problems over {n} cells)")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"doctor_gate: OK — {n} cells: every serialized cell "
+          f"config-bound; every overlapped fabric cell moved toward "
+          f"compute-bound (ridge down, T_set partly hidden)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -138,6 +138,33 @@ def report() -> str:
     return "\n".join(lines)
 
 
+def export_trace(path: str) -> None:
+    """Instrumented simulator counterpart of the sweep's operating point:
+    a mixed Gemmini+OpenGeMM pool draining interleaved tenant streams over
+    the NoC, so the exported trace carries one roofline-relevant run the
+    doctor can classify next to the dry-run table."""
+    try:
+        from benchmarks.trace_util import export_trace as _export
+    except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+        from trace_util import export_trace as _export
+    from repro.sched import LaunchRequest, Scheduler
+
+    def scenario(tracer):
+        s = Scheduler.from_registry({"gemmini": 1, "opengemm": 1},
+                                    link="noc", overlap="overlapped",
+                                    tracer=tracer)
+        reqs = [
+            LaunchRequest(f"arch{i % 2}", (32, 32, 32),
+                          {f"f{j}": 48 * i + j for j in range(20)},
+                          accel="opengemm" if i % 2 else "gemmini",
+                          arrival_time=64.0 * i)
+            for i in range(14)
+        ]
+        return s.run_open_loop(reqs)
+
+    _export(path, scenario)
+
+
 def main() -> None:
     global PRESET
     p = argparse.ArgumentParser()
@@ -146,12 +173,17 @@ def main() -> None:
     p.add_argument("--all", action="store_true", help="re-run existing cells too")
     p.add_argument("--preset", default="", choices=("", "optimized"))
     p.add_argument("--timeout", type=int, default=3600)
+    p.add_argument("--trace-out", default=None,
+                   help="export an instrumented mixed-pool simulator run "
+                        "matching the sweep's operating point")
     args = p.parse_args()
     PRESET = args.preset
     if args.run:
         run_all(only_missing=not args.all, timeout=args.timeout)
     if args.report:
         print(report())
+    if args.trace_out:
+        export_trace(args.trace_out)
 
 
 if __name__ == "__main__":

@@ -212,29 +212,35 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+try:
+    from benchmarks.trace_util import export_trace as _export
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from trace_util import export_trace as _export
+
+
 def export_trace(path: str, smoke: bool) -> None:
     """Instrument one executed warm migration (NoC, Gemmini, 64-field
     context): the snapshot burst shows up on the migration wire lane and is
     classified ``other_transfer`` by the attribution (it belongs to no
     launch), while the delta launch traces normally on the destination."""
-    from repro.obs import Tracer, attribute, write_trace
-
-    tracer = Tracer()
     n_static = 8 if smoke else 64
-    src = Host.from_registry("src", dict(POOL), link="noc", tracer=tracer)
-    for i in range(3):
-        src.dispatch(big_ctx_request("t0", "gemmini", n_static,
-                                     0x1000 + 64 * i))
-    dst = Host.from_registry("dst", dict(POOL), link="noc", tracer=tracer)
-    planner = MigrationPlanner(link="noc", policy="warm")
-    planner.port.tracer = tracer
-    probe = big_ctx_request("t0", "gemmini", n_static, ptr=0x2000)
-    planner.migrate("t0", src, dst, probe, now=src.clock)
-    dst.dispatch(probe)
-    rep = dst.report()
-    write_trace(tracer, path, attribution=attribute(rep).check(),
-                metrics=rep.metrics)
-    print(f"wrote {path}")
+
+    def scenario(tracer):
+        src = Host.from_registry("src", dict(POOL), link="noc",
+                                 tracer=tracer)
+        for i in range(3):
+            src.dispatch(big_ctx_request("t0", "gemmini", n_static,
+                                         0x1000 + 64 * i))
+        dst = Host.from_registry("dst", dict(POOL), link="noc",
+                                 tracer=tracer)
+        planner = MigrationPlanner(link="noc", policy="warm")
+        planner.port.tracer = tracer
+        probe = big_ctx_request("t0", "gemmini", n_static, ptr=0x2000)
+        planner.migrate("t0", src, dst, probe, now=src.clock)
+        dst.dispatch(probe)
+        return dst.report()
+
+    _export(path, scenario)
 
 
 def main() -> None:

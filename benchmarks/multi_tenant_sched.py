@@ -20,10 +20,17 @@ via ``timeline.compare`` and per-device configuration-roofline placements.
 
 from __future__ import annotations
 
+import argparse
+
 from repro.core import accelerators, matmul_driver, timeline
 from repro.core.interp import run as interp_run
 from repro.core.passes import baseline
 from repro.sched import LaunchRequest, Scheduler, requests_from_trace
+
+try:
+    from benchmarks.trace_util import export_trace as _export
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from trace_util import export_trace as _export
 
 MODELS = {
     "gemmini": accelerators.gemmini_like(),
@@ -87,7 +94,27 @@ def run(depth: int = 2, max_contexts: int = 4) -> dict:
     }
 
 
+def export_trace(path: str) -> None:
+    """Re-run the cached-affinity configuration instrumented: six compiled
+    tenant streams interleaved onto the mixed pool, with the cycle
+    attribution and metrics registry embedded in the exported trace."""
+    requests = interleave(tenant_streams())
+    pool = {"gemmini:0": MODELS["gemmini"], "opengemm:0": MODELS["opengemm"]}
+
+    def scenario(tracer):
+        sched = Scheduler(dict(pool), policy="affinity", cache_enabled=True,
+                          tracer=tracer)
+        return sched.run(list(requests))
+
+    _export(path, scenario)
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-out", default=None,
+                    help="also export an instrumented trace of the cached "
+                         "affinity configuration to this path")
+    args = ap.parse_args()
     r = run()
     naive, sched = r["naive"], r["sched"]
     print("# multi-tenant scheduling on {gemmini, opengemm} pool "
@@ -115,6 +142,8 @@ def main() -> None:
     assert r["geomean_util_sched"] > r["geomean_util_naive"], (
         "acceptance: higher geomean utilization"
     )
+    if args.trace_out:
+        export_trace(args.trace_out)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,14 @@ stdlib-only so the gate can run before (or without) the repo's deps:
    the seeded smoke values; every key is higher-is-better). A key below
    its floor, or a baselined key missing from the artifact, fails.
 
+When a floor fails for a bench listed under the baseline's
+``_recorded_traces`` map, the gate additionally runs the differential
+doctor (``src/repro/obs/diff.py``, loaded by file path — it is standalone
+stdlib) between the committed known-good trace and the just-produced
+``TRACE_<name>.json``, and writes the decomposition to
+``DIAG_<name>.json`` so CI uploads *why* the regression happened, not
+just that it did.
+
 Usage: ``python benchmarks/obs_gate.py [--dir .]``
 """
 
@@ -80,9 +88,11 @@ def check_trace(path: str) -> list[str]:
     return problems
 
 
-def check_geomeans(bench_paths: list[str], baseline_path: str) -> list[str]:
+def check_geomeans(bench_paths: list[str], baseline_path: str,
+                   artifact_dir: str = ".") -> list[str]:
     problems: list[str] = []
     baseline = json.load(open(baseline_path))
+    regressed: set[str] = set()
     seen: set[str] = set()
     for path in bench_paths:
         doc = json.load(open(path))
@@ -100,10 +110,55 @@ def check_geomeans(bench_paths: list[str], baseline_path: str) -> list[str]:
             elif got < floor:
                 problems.append(f"{path}: geomean {key} = {got:.4f} below "
                                 f"committed floor {floor:.4f}")
+                regressed.add(name)
     for name in sorted(set(baseline) - seen):
+        if name.startswith("_"):
+            continue  # metadata keys (e.g. _recorded_traces), not benches
         problems.append(f"baselined benchmark {name!r} produced no "
                         f"BENCH artifact")
+    problems += diagnose_regressions(regressed, baseline, baseline_path,
+                                     artifact_dir)
     return problems
+
+
+def diagnose_regressions(regressed: set[str], baseline: dict,
+                         baseline_path: str, artifact_dir: str) -> list[str]:
+    """For each floor-failing bench with a committed known-good trace, run
+    the differential doctor and leave DIAG_<name>.json next to the
+    artifacts. Diagnosis failures are reported but never mask the floor
+    failure itself."""
+    notes: list[str] = []
+    recorded = baseline.get("_recorded_traces", {})
+    for name in sorted(regressed & set(recorded)):
+        good = os.path.join(os.path.dirname(baseline_path), recorded[name])
+        bad = os.path.join(artifact_dir, f"TRACE_{name}.json")
+        out = os.path.join(artifact_dir, f"DIAG_{name}.json")
+        try:
+            d = _load_diff().diff(json.load(open(good)), json.load(open(bad)))
+            with open(out, "w") as f:
+                json.dump(d, f, indent=2, sort_keys=True)
+            top = d["ranked"][0] if d["ranked"] else None
+            culprit = (f"{top['lane']}:{top['component']} "
+                       f"{top['delta']:+.1f}" if top else "no lane delta")
+            notes.append(f"  wrote {out} (vs {recorded[name]}; makespan "
+                         f"{d['makespan']['delta']:+.1f}, top {culprit})")
+        except (OSError, ValueError, KeyError) as exc:
+            notes.append(f"  diff of {name!r} vs {recorded[name]} "
+                         f"failed: {exc}")
+    return notes
+
+
+def _load_diff():
+    """Import repro.obs.diff by file path — the gate stays runnable without
+    PYTHONPATH or the repo's deps (diff.py is standalone stdlib)."""
+    import importlib.util
+
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "src", "repro", "obs", "diff.py")
+    spec = importlib.util.spec_from_file_location("_obs_diff", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def main() -> None:
@@ -123,7 +178,7 @@ def main() -> None:
     problems: list[str] = []
     for path in traces:
         problems += check_trace(path)
-    problems += check_geomeans(benches, args.baseline)
+    problems += check_geomeans(benches, args.baseline, args.dir)
 
     if problems:
         print("\n".join(problems))

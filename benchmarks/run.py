@@ -11,27 +11,32 @@ from __future__ import annotations
 import argparse
 
 
+try:
+    from benchmarks.trace_util import export_trace as _export
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from trace_util import export_trace as _export
+
+
 def export_trace(path: str) -> None:
     """Write a Perfetto/chrome-trace JSON of one small instrumented
     mixed-pool scheduler run (NoC fabric, overlapped staging), with its
     conservation-checked cycle attribution embedded."""
-    from repro.obs import Tracer, attribute, write_trace
     from repro.sched import LaunchRequest, Scheduler
 
-    tracer = Tracer()
-    s = Scheduler.from_registry({"gemmini": 1, "opengemm": 1}, link="noc",
-                                overlap="overlapped", tracer=tracer)
-    reqs = [
-        LaunchRequest(f"t{i % 3}", (16, 16, 16),
-                      {f"p{j}": 64 * i + j for j in range(16)},
-                      accel="opengemm" if i % 2 else "gemmini",
-                      arrival_time=40.0 * i)
-        for i in range(12)
-    ]
-    rep = s.run_open_loop(reqs)
-    write_trace(tracer, path, attribution=attribute(rep).check(),
-                metrics=rep.metrics)
-    print(f"wrote {path}")
+    def scenario(tracer):
+        s = Scheduler.from_registry({"gemmini": 1, "opengemm": 1},
+                                    link="noc", overlap="overlapped",
+                                    tracer=tracer)
+        reqs = [
+            LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                          {f"p{j}": 64 * i + j for j in range(16)},
+                          accel="opengemm" if i % 2 else "gemmini",
+                          arrival_time=40.0 * i)
+            for i in range(12)
+        ]
+        return s.run_open_loop(reqs)
+
+    _export(path, scenario)
 
 
 def main() -> None:

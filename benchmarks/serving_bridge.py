@@ -162,24 +162,28 @@ def run(smoke: bool = False) -> dict:
     }
 
 
+try:
+    from benchmarks.trace_util import export_trace as _export
+except ImportError:  # executed as a script: benchmarks/ is sys.path[0]
+    from trace_util import export_trace as _export
+
+
 def export_trace(path: str, smoke: bool) -> None:
     """Re-run the first cell's sticky-affinity configuration closed-loop
     with a tracer attached: the exported trace carries host/wire/compute
     lanes plus per-tenant step and token lanes, with the conservation-
     checked cycle attribution and the unified metrics registry embedded."""
-    from repro.obs import Tracer, attribute, write_trace
-
     model, params, decode_fn = build_model()
     tenants = make_tenants(model, params, decode_fn, n_tenants=6,
                            max_new=6 if smoke else 10)
-    tracer = Tracer()
-    cluster = Cluster.uniform(2, {"opengemm": 1}, policy="affinity",
-                              sticky=True, link="noc",
-                              max_contexts=MAX_CONTEXTS, tracer=tracer)
-    rep = ClosedLoopDriver(tenants, cluster).run()
-    write_trace(tracer, path, attribution=attribute(rep).check(),
-                metrics=rep.metrics)
-    print(f"wrote {path}")
+
+    def scenario(tracer):
+        cluster = Cluster.uniform(2, {"opengemm": 1}, policy="affinity",
+                                  sticky=True, link="noc",
+                                  max_contexts=MAX_CONTEXTS, tracer=tracer)
+        return ClosedLoopDriver(tenants, cluster).run()
+
+    _export(path, scenario)
 
 
 def main() -> None:

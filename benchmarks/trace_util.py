@@ -1,0 +1,37 @@
+"""Shared ``--trace-out`` export helper for every benchmark.
+
+Each benchmark that supports ``--trace-out`` re-runs one representative
+scenario instrumented with a :class:`repro.obs.Tracer` and exports the
+Perfetto-loadable trace with its conservation-checked cycle attribution
+and metrics registry embedded (what ``obs_gate.py`` validates and
+``python -m repro.obs.doctor`` diagnoses). The tracer wiring, attribution
+check, and validated write used to be copy-pasted per benchmark; this is
+the one copy.
+
+Usage::
+
+    from trace_util import export_trace          # script execution
+    # (or `from benchmarks.trace_util import ...` under `-m`)
+
+    def scenario(tracer):
+        sched = Scheduler.from_registry({...}, tracer=tracer)
+        return sched.run_open_loop(reqs)
+
+    export_trace(path, scenario)
+"""
+
+from __future__ import annotations
+
+
+def export_trace(path: str, scenario) -> dict:
+    """Run ``scenario(tracer)`` (must return a run report — scheduler,
+    cluster, or bridge) and write its validated trace document to
+    ``path``. Returns the written document."""
+    from repro.obs import Tracer, attribute, write_trace
+
+    tracer = Tracer()
+    rep = scenario(tracer)
+    doc = write_trace(tracer, path, attribution=attribute(rep).check(),
+                      metrics=rep.metrics)
+    print(f"wrote {path}")
+    return doc

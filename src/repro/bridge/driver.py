@@ -40,6 +40,7 @@ from dataclasses import dataclass
 from typing import Mapping, Sequence
 
 from ..cluster.router import Cluster
+from ..obs.monitor import feed_step
 from .report import BridgeReport, build_bridge_report
 from .tenant import TenantEngine
 
@@ -76,7 +77,7 @@ class ClosedLoopDriver:
 
     def __init__(self, tenants: Sequence[TenantEngine], cluster: Cluster,
                  *, start_offsets: Mapping[str, float] | None = None,
-                 tracer=None):
+                 tracer=None, monitor=None):
         assert tenants, "need at least one tenant engine"
         names = [t.tenant for t in tenants]
         assert len(set(names)) == len(names), f"duplicate tenants in {names}"
@@ -88,6 +89,12 @@ class ClosedLoopDriver:
         # launch spans the hosts already emit land in one trace
         self.tracer = tracer if tracer is not None \
             else getattr(cluster, "tracer", None)
+        # streaming observer (obs.monitor.StreamMonitor): fed one sample
+        # batch per step under the canonical ``bridge.*`` names, so
+        # windowed signals (SLO burn rate, exposed-config ratio, token
+        # rate) are live *during* the run. Observation-only: feeding it
+        # never moves a clock.
+        self.monitor = monitor
 
     def _dispatch(self, te: TenantEngine, desc: dict, now: float):
         """Route + dispatch one mirrored launch; returns its
@@ -153,6 +160,11 @@ class ClosedLoopDriver:
                 config_cycles=cfg,
                 exposed_config=exposed,
             ))
+            if self.monitor is not None:
+                feed_step(self.monitor, tenant=name, completion=t,
+                          tokens=produced, latency=t - now,
+                          config_cycles=cfg, exposed_config=exposed,
+                          slo_cycles=te.slo_cycles)
             if self.tracer is not None:
                 self.tracer.span("step", "step", now, t,
                                  lane=f"step[{name}]", tenant=name,

@@ -73,6 +73,7 @@ class Host:
         link: LinkModel | str | None = None,
         overlap: str = "serialized",
         staging_buffers: int = 2,
+        transport: str = "auto",
         port: LinkPort | None = None,
         tracer=None,
     ):
@@ -84,7 +85,8 @@ class Host:
         self.sched = Scheduler(pool, depth=depth, max_contexts=max_contexts,
                                policy=policy, cache_enabled=cache_enabled,
                                link=link, overlap=overlap,
-                               staging_buffers=staging_buffers, port=port,
+                               staging_buffers=staging_buffers,
+                               transport=transport, port=port,
                                tracer=bound)
         # tenants whose *slot context* (a hosted engine shard's KV cache)
         # lives on this host — the binding residency the sticky router

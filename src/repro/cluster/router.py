@@ -161,6 +161,8 @@ class Cluster:
         link=None,
         sticky: bool = False,
         overlap: str = "serialized",
+        staging_buffers: int = 2,
+        transport: str = "auto",
         shared_port: bool = False,
         tracer=None,
     ) -> "Cluster":
@@ -185,7 +187,9 @@ class Cluster:
             Host.from_registry(f"h{i}", dict(counts), depth=depth,
                                max_contexts=max_contexts, policy=host_policy,
                                cache_enabled=cache_enabled, link=link,
-                               overlap=overlap, port=port, tracer=tracer)
+                               overlap=overlap,
+                               staging_buffers=staging_buffers,
+                               transport=transport, port=port, tracer=tracer)
             for i in range(n_hosts)
         ]
         return cls(hosts, policy=policy, seed=seed, sticky=sticky,

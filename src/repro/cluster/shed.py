@@ -31,6 +31,7 @@ from dataclasses import dataclass
 from typing import Sequence
 
 from ..fabric.migrate import MigrationPlanner, MigrationRecord
+from ..obs.monitor import SustainedThreshold
 from .host import Host
 from .slo import percentile
 
@@ -52,21 +53,29 @@ class ShedTrigger:
     """Threshold rule driving the migration planner.
 
     Call :meth:`observe` periodically (each admission epoch, each bridge
-    step, ...). Counters are per host: a host must stay hot for
-    ``sustain`` consecutive observations before it sheds, and its counter
-    resets after a shed (give the move time to drain) or whenever it dips
-    back under the threshold.
+    step, ...). Debouncing is the obs layer's
+    :class:`~repro.obs.monitor.SustainedThreshold` keyed by host: a host
+    must stay hot for ``sustain`` consecutive observations before it
+    sheds, and the key is acknowledged (reset) after a shed — give the
+    move time to drain — or whenever it dips back under the threshold.
+    A failed shed attempt (no viable victim or destination) leaves the
+    alert fired, so it retries next epoch.
+
+    ``monitor`` (an :class:`~repro.obs.monitor.StreamMonitor`) optionally
+    receives every observation under ``cluster.port_wait`` keyed by host,
+    so dashboards window the same pressure signal the trigger acts on.
     """
 
     def __init__(self, planner: MigrationPlanner, *, k: float = 1.5,
-                 sustain: int = 2):
+                 sustain: int = 2, monitor=None):
         assert k > 1.0, "threshold must exceed the median or every host is hot"
         assert sustain >= 1
         self.planner = planner
         self.k = k
         self.sustain = sustain
         self.decisions: list[ShedDecision] = []
-        self._hot_streak: dict[str, int] = {}
+        self.pressure = SustainedThreshold(sustain=sustain)
+        self.monitor = monitor
 
     # -- the rule -------------------------------------------------------------
 
@@ -87,21 +96,21 @@ class ShedTrigger:
         moment the first hand-off is committed, so piling every victim
         onto the single coldest host would just mint the next hot host."""
         waits = {h.id: h.port_wait_estimate(now=now) for h in hosts}
+        if self.monitor is not None:
+            for host_id, wait in waits.items():
+                self.monitor.observe("cluster.port_wait", now, wait,
+                                     host=host_id)
         hot, median = self.hot_hosts(waits)
         fired: list[ShedDecision] = []
         used_dsts: set[str] = set()
         for host in hosts:
-            if host.id not in hot:
-                self._hot_streak[host.id] = 0
-                continue
-            self._hot_streak[host.id] = self._hot_streak.get(host.id, 0) + 1
-            if self._hot_streak[host.id] < self.sustain:
+            if not self.pressure.update(host.id, host.id in hot):
                 continue
             decision = self._shed(host, hosts, waits, now, median, used_dsts)
             if decision is not None:
                 fired.append(decision)
                 used_dsts.add(decision.dst)
-                self._hot_streak[host.id] = 0
+                self.pressure.reset(host.id)
         self.decisions.extend(fired)
         return fired
 

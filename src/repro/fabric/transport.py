@@ -89,13 +89,24 @@ def burst_schedule(n_fields: int, model: AcceleratorModel,
     )
 
 
-def plan_fields(n_fields: int, model: AcceleratorModel,
-                link: LinkModel) -> TransferSchedule:
-    """The cheaper of MMIO and burst DMA for an ``n_fields``-register plan
-    (ties go to MMIO — no descriptor to build)."""
+TRANSPORTS = ("auto", "mmio", "burst")
+
+
+def plan_fields(n_fields: int, model: AcceleratorModel, link: LinkModel,
+                mode: str = "auto") -> TransferSchedule:
+    """Price an ``n_fields``-register plan. ``mode="auto"`` (the default)
+    picks the cheaper of MMIO and burst DMA, ties to MMIO — no descriptor
+    to build. ``"mmio"`` forces per-register writes (the paper's baseline
+    discipline, and the doctor's counterfactual knob); ``"burst"`` forces
+    the DMA path, falling back to MMIO on links without a DMA engine."""
+    assert mode in TRANSPORTS, mode
     mmio = mmio_schedule(n_fields, model, link)
+    if mode == "mmio":
+        return mmio
     burst = burst_schedule(n_fields, model, link)
-    if burst is not None and burst.t_set < mmio.t_set:
+    if burst is None:
+        return mmio
+    if mode == "burst" or burst.t_set < mmio.t_set:
         return burst
     return mmio
 

@@ -28,10 +28,30 @@ calibration substrate they now share:
   (counters/gauges/histograms with label sets): the one place a number
   lives. ``sched.telemetry`` / ``cluster.slo`` / ``bridge.report`` keep
   their public APIs as thin views over it.
+
+The diagnosis layer turns that telemetry into answers:
+
+* :mod:`~repro.obs.diagnose` — the config-wall doctor: :func:`classify`
+  a run into config-bound / wire-bound / compute-bound / arrival-limited
+  (the Eq. 4 ridge as a rule), with ranked quantified recommendations.
+* :mod:`~repro.obs.whatif` — replay-based what-if estimators behind each
+  recommendation (enable overlap, MMIO→burst, staging buffers), validated
+  against actual re-simulation in ``tests/test_doctor.py``.
+* :mod:`~repro.obs.diff` — differential comparison of two traces with
+  stable lane matching; the CI floor-failure triage tool.
+* :mod:`~repro.obs.monitor` — sliding-window streaming metrics +
+  hysteresis alerts over the closed loop (``ShedTrigger`` subscribes to
+  :class:`SustainedThreshold` instead of keeping private streak counters).
+* :mod:`~repro.obs.doctor` — ``python -m repro.obs.doctor TRACE.json
+  [--against OTHER.json]``.
 """
 
-from . import attribution, export, metrics, trace
+from . import attribution, diagnose, diff, export, metrics, monitor, trace
+from . import whatif
 from .attribution import AttributionReport, LaneAttribution, attribute
+from .diagnose import Diagnosis, Recommendation, Regime, classify
+from .diagnose import classify_cell, diagnose_doc
+from .diagnose import diagnose as diagnose_report
 from .export import chrome_trace, validate_trace, write_trace
 from .metrics import (
     Counter,
@@ -40,27 +60,55 @@ from .metrics import (
     MetricsRegistry,
     percentile,
 )
+from .monitor import (
+    Alert,
+    StreamMonitor,
+    SustainedThreshold,
+    WindowSeries,
+    feed_step,
+)
 from .trace import BoundTracer, CounterSample, Instant, Span, Tracer
+from .whatif import WhatIf, predict_burst, predict_overlap, predict_staging
 
 __all__ = [
+    "Alert",
     "AttributionReport",
     "BoundTracer",
     "Counter",
     "CounterSample",
+    "Diagnosis",
     "Gauge",
     "Histogram",
     "Instant",
     "LaneAttribution",
     "MetricsRegistry",
+    "Recommendation",
+    "Regime",
     "Span",
+    "StreamMonitor",
+    "SustainedThreshold",
     "Tracer",
+    "WhatIf",
+    "WindowSeries",
     "attribute",
     "attribution",
     "chrome_trace",
+    "classify",
+    "classify_cell",
+    "diagnose",
+    "diagnose_doc",
+    "diagnose_report",
+    "diff",
     "export",
+    "feed_step",
     "metrics",
+    "monitor",
     "percentile",
+    "predict_burst",
+    "predict_overlap",
+    "predict_staging",
     "trace",
     "validate_trace",
+    "whatif",
     "write_trace",
 ]

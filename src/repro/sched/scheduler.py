@@ -131,10 +131,16 @@ class Scheduler:
         link: LinkModel | str | None = None,
         overlap: str = "serialized",
         staging_buffers: int = 2,
+        transport: str = "auto",
         port: LinkPort | None = None,
         tracer=None,
     ):
         assert policy in POLICIES, policy
+        # transport discipline for config writes: "auto" lets the fabric
+        # pick the cheaper of MMIO and burst DMA per plan; "mmio"/"burst"
+        # force one side — the counterfactual knob obs.whatif validates
+        # its burst-DMA predictions against
+        self.transport = transport
         if pool is None:
             pool = {name: model for name, model in REGISTRY.items()}
         # one label-set registry per scheduler (repro.obs.metrics): every
@@ -228,7 +234,7 @@ class Scheduler:
             n_sent, elided = len(plan.sent), plan.bytes_elided
         else:
             n_sent, elided = len(regs), 0
-        xfer = plan_fields(n_sent, dev.model, self.link)
+        xfer = plan_fields(n_sent, dev.model, self.link, self.transport)
         cfg_c = self.overlap.exposed_cost(dev.model.concurrent, xfer)
         issue = self.host + cfg_c
         if dev.model.concurrent:
@@ -310,7 +316,8 @@ class Scheduler:
             plan = WritePlan(sent=dict(regs), elided={}, bytes_sent=total,
                              bytes_elided=0, context_hit=False)
         issue = self.host
-        xfer = plan_fields(len(plan.sent), dev.model, self.link)
+        xfer = plan_fields(len(plan.sent), dev.model, self.link,
+                           self.transport)
         cfg_c = xfer.t_set
         # reserve host + wire through the overlap policy: serialized keeps
         # the host captive for the wire (bit-exact pre-engine behavior);
@@ -452,6 +459,8 @@ class Scheduler:
             resources={name: ResourceTelemetry.from_resource(res, makespan)
                        for name, res in self.res.all().items()},
             overlap_mode=self.overlap.mode,
+            staging_buffers=self.overlap.buffers,
+            transport=self.transport,
             metrics=self.metrics,
         )
 

@@ -395,6 +395,10 @@ class SchedulerReport:
     # engine occupancy: host / wire / per-device compute busy timelines
     resources: dict[str, ResourceTelemetry] = field(default_factory=dict)
     overlap_mode: str = "serialized"
+    # the run's knob settings, recorded so obs.whatif can replay the run
+    # under its *actual* configuration before flipping one knob
+    staging_buffers: int = 2
+    transport: str = "auto"
     # the scheduler's label-set registry (repro.obs.metrics): the aggregate
     # properties below are views over it; None only for hand-built reports
     metrics: MetricsRegistry | None = None

@@ -1,0 +1,353 @@
+"""repro.obs diagnosis layer: the what-if replay's 15% validation pin
+(the ISSUE acceptance bar — predictions vs actual re-simulated savings
+for each recommendation class), regime classification, differential diff
+lane matching, sliding-window monitor primitives, the ShedTrigger
+regression pin after its SustainedThreshold refactor, and the doctor CLI."""
+
+import json
+
+import pytest
+
+from repro.cluster import Cluster, ShedTrigger, TenantProfile, generate
+from repro.fabric import MigrationPlanner
+from repro.obs import (
+    StreamMonitor,
+    SustainedThreshold,
+    Tracer,
+    WindowSeries,
+    attribute,
+    classify,
+    classify_cell,
+    diagnose_report,
+    feed_step,
+    predict_burst,
+    predict_overlap,
+    predict_staging,
+    write_trace,
+)
+from repro.obs import diff as obs_diff
+from repro.obs.whatif import extract_rows, replay
+from repro.sched import LaunchRequest, Scheduler
+
+# ----------------------------------------------------------- what-if replay
+
+
+def _stream(n=14, fields=24, mixed=True, gap=0.0):
+    """Every field value changes every launch, so the cache elides nothing
+    and burst-eligible write plans stay large."""
+    return [
+        LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                      {f"f{j}": 96 * i + j for j in range(fields)},
+                      accel=("opengemm" if i % 2 else "gemmini") if mixed
+                      else "opengemm",
+                      arrival_time=gap * i)
+        for i in range(n)
+    ]
+
+
+def _run(link, mode, **kwargs):
+    s = Scheduler.from_registry({"opengemm": 1, "gemmini": 1}, link=link,
+                                overlap=mode, **kwargs)
+    return s.run_open_loop(_stream())
+
+
+@pytest.mark.parametrize("link", ["csr", "noc", "pcie"])
+@pytest.mark.parametrize("mode", ["serialized", "overlapped"])
+def test_replay_reproduces_the_engine_bit_exactly(link, mode):
+    """The dispatch-recurrence replay is the estimator's foundation: over
+    the recorded launch log it must land on the engine's own makespan and
+    exposed-config split exactly, on every link class and overlap mode."""
+    rep = _run(link, mode)
+    r = replay(extract_rows(rep), mode=mode,
+               buffers=rep.staging_buffers)
+    assert r.makespan == rep.makespan
+    assert r.exposed_config == pytest.approx(rep.exposed_config_cycles)
+    assert r.config_cycles == pytest.approx(rep.config_cycles)
+
+
+def _pin(whatif, actual_savings):
+    """The acceptance bar: predicted within 15% of the re-simulated truth."""
+    assert whatif is not None
+    assert actual_savings > 0.0
+    err = abs(whatif.predicted_savings - actual_savings) / actual_savings
+    assert err <= 0.15, (whatif.predicted_savings, actual_savings, err)
+
+
+@pytest.mark.parametrize("link", ["noc", "pcie"])
+def test_predict_overlap_within_15pct_of_resimulation(link):
+    ser = _run(link, "serialized")
+    wi = predict_overlap(ser)
+    ov = _run(link, "overlapped")
+    _pin(wi, ser.makespan - ov.makespan)
+    assert wi.action == "enable_overlap"
+    assert wi.knob == {"overlap": "overlapped"}
+    assert wi.predicted_speedup > 1.0
+
+
+def test_predict_burst_within_15pct_of_resimulation():
+    """Force per-register MMIO, ask the doctor what burst DMA would buy,
+    then actually flip the transport knob (≥8-field plans throughout, so
+    the estimator's crossover filter matches the forced re-run)."""
+    mmio = _run("noc", "serialized", transport="mmio")
+    wi = predict_burst(mmio)
+    burst = _run("noc", "serialized", transport="burst")
+    _pin(wi, mmio.makespan - burst.makespan)
+    assert wi.knob == {"transport": "burst"}
+    assert wi.detail["repriced_launches"] == len(extract_rows(mmio))
+
+
+def test_predict_staging_within_15pct_of_resimulation():
+    """One more configuration bank on a bank-starved overlapped run: a
+    single concurrent device with one bank serializes each async transfer
+    behind the *previous* compute's retirement — the regime a second bank
+    pipelines away."""
+    def run(buffers):
+        s = Scheduler.from_registry({"opengemm": 1}, link="noc",
+                                    overlap="overlapped",
+                                    staging_buffers=buffers)
+        return s.run_open_loop(_stream(n=12, fields=32, mixed=False))
+
+    one = run(1)
+    wi = predict_staging(one, buffers=2)
+    _pin(wi, one.makespan - run(2).makespan)
+    assert wi.knob == {"staging_buffers": 2}
+
+
+def test_predictors_decline_when_the_knob_is_moot():
+    ov = _run("noc", "overlapped")
+    assert predict_overlap(ov) is None  # already overlapped
+    csr = _run("csr", "serialized")
+    assert predict_burst(csr) is None  # CSR port has no DMA engine
+    assert predict_overlap(csr) is None  # nothing async-eligible
+    assert predict_staging(_run("noc", "serialized")) is None  # serialized
+    assert predict_staging(ov, buffers=2) is None  # already there
+
+
+# ----------------------------------------------------------- classification
+
+
+def test_classify_precedence():
+    # arrival-limited wins even with visible config: knobs can't help an
+    # underloaded system
+    r = classify(makespan=100.0, exposed_config=20.0, config_cycles=20.0,
+                 host_busy=30.0, wire_busy=10.0, compute_busy=40.0)
+    assert r.label == "arrival_limited"
+    # exposed share ≥ 10% → config-bound even under dominant compute
+    r = classify(makespan=100.0, exposed_config=12.0, config_cycles=40.0,
+                 host_busy=60.0, wire_busy=30.0, compute_busy=95.0)
+    assert r.label == "config_bound"
+    assert r.exposed_share == pytest.approx(0.12)
+    assert r.exposed_fraction == pytest.approx(0.3)
+    # hidden transfers saturating the link → wire-bound
+    r = classify(makespan=100.0, exposed_config=2.0, config_cycles=80.0,
+                 host_busy=20.0, wire_busy=80.0, compute_busy=60.0)
+    assert r.label == "wire_bound"
+    r = classify(makespan=100.0, exposed_config=2.0, config_cycles=10.0,
+                 host_busy=20.0, wire_busy=30.0, compute_busy=90.0)
+    assert r.label == "compute_bound"
+
+
+def test_classify_cell_matches_bench_schema():
+    cell = {"makespan": 1000.0, "exposed_config_cycles": 400.0,
+            "config_cycles": 500.0, "host_busy": 600.0, "wire_busy": 300.0,
+            "compute_busy": 550.0}
+    assert classify_cell(cell).label == "config_bound"
+
+
+def test_diagnose_live_serialized_run_is_config_bound_with_ranked_recs():
+    rep = _run("pcie", "serialized")
+    diag = diagnose_report(rep)
+    assert diag.regime.label == "config_bound"
+    actions = [r.action for r in diag.recommendations]
+    assert "enable_overlap" in actions
+    savings = [r.predicted_savings or 0.0 for r in diag.recommendations]
+    assert savings == sorted(savings, reverse=True)
+    top = diag.recommendations[0]
+    assert top.whatif is not None and top.predicted_savings > 0.0
+    text = diag.render()
+    assert "CONFIG-BOUND" in text and "enable_overlap" in text
+
+
+# ----------------------------------------------------------------- diff
+
+
+def _att_dict(rep):
+    return attribute(rep).check().to_dict()
+
+
+def test_diff_decomposes_the_overlap_win():
+    ser = _att_dict(_run("noc", "serialized"))
+    ov = _att_dict(_run("noc", "overlapped"))
+    d = obs_diff.diff(ser, ov)
+    assert d["makespan"]["delta"] == pytest.approx(
+        ov["makespan"] - ser["makespan"])
+    assert d["makespan"]["delta"] < 0.0  # overlap won
+    assert all(l["status"] == "matched" for l in d["lanes"].values())
+    deltas = [abs(r["delta"]) for r in d["ranked"]]
+    assert deltas == sorted(deltas, reverse=True) and deltas
+    assert "(no component moved)" not in obs_diff.render(d)
+
+
+def test_diff_matches_renamed_and_orphan_lanes():
+    base = {"makespan": 100.0, "exposed_config": 10.0,
+            "summary": {"compute": 50.0},
+            "lanes": {
+                "cfg[noc]": {"kind": "wire",
+                             "components": {"exposed_transfer": 10.0}},
+                "compute[d0]": {"kind": "compute",
+                                "components": {"busy": 50.0}},
+            }}
+    other = {"makespan": 110.0, "exposed_config": 12.0,
+             "summary": {"compute": 55.0},
+             "lanes": {
+                 "cfg[noc2]": {"kind": "wire",
+                               "components": {"exposed_transfer": 12.0}},
+                 "compute[d0]": {"kind": "compute",
+                                 "components": {"busy": 40.0}},
+                 "compute[d1]": {"kind": "compute",
+                                 "components": {"busy": 15.0}},
+             }}
+    d = obs_diff.diff(base, other)
+    # the lone wire lanes pair up across the rename
+    wire = d["lanes"]["cfg[noc2]"]
+    assert wire["status"] == "renamed" and wire["base_lane"] == "cfg[noc]"
+    assert wire["components"]["exposed_transfer"]["delta"] == 2.0
+    # compute[d1] exists only on the other side
+    assert d["lanes"]["compute[d1]"]["status"] == "added"
+    assert d["lanes"]["compute[d1]"]["components"]["busy"]["base"] == 0.0
+
+
+def test_diff_reads_trace_documents_and_metric_deltas():
+    doc = {"attribution": {"makespan": 10.0, "exposed_config": 1.0,
+                           "summary": {}, "lanes": {}},
+           "metrics": [{"name": "n", "kind": "counter",
+                        "labels": {"host": "h0"}, "value": 3.0}]}
+    doc2 = json.loads(json.dumps(doc))
+    doc2["metrics"][0]["value"] = 5.0
+    d = obs_diff.diff(doc, doc2)
+    (key, row), = d["metrics"].items()
+    assert key == "n{host=h0}" and row["delta"] == 2.0
+
+
+# ----------------------------------------------------------------- monitor
+
+
+def test_window_series_trims_and_rates():
+    s = WindowSeries(window=10.0)
+    s.observe(0.0, 5.0)
+    s.observe(4.0, 3.0)
+    s.observe(10.0, 2.0)
+    assert s.sum(now=10.0) == 5.0  # t=0 is at the edge and drops
+    assert s.mean(now=10.0) == 2.5
+    assert s.rate(now=10.0) == pytest.approx(0.5)  # 5 over a 10-cycle window
+    assert s.count(now=14.0) == 1 and s.last() == 2.0
+    assert s.count(now=20.5) == 0  # fully aged out
+    s2 = WindowSeries(window=10.0)
+    s2.observe(5.0, 1.0)
+    with pytest.raises(AssertionError):
+        s2.observe(4.0, 1.0)  # time must not run backwards
+
+
+def test_sustained_threshold_debounce_ack_and_edge_hook():
+    fired = []
+    t = SustainedThreshold(sustain=2, on_alert=lambda k, s: fired.append(k))
+    assert not t.update("h0", True)
+    assert t.update("h0", True) and fired == ["h0"]
+    assert t.update("h0", True) and fired == ["h0"]  # edge fires once
+    t.reset("h0")  # acknowledged: must re-sustain
+    assert not t.update("h0", True)
+    assert t.update("h0", True) and fired == ["h0", "h0"]
+    assert not t.update("h0", False)  # condition break zeroes the streak
+    assert not t.update("h0", True)
+
+
+def test_stream_monitor_serving_signals_and_alerts():
+    m = StreamMonitor(window=1_000.0)
+    for i in range(10):
+        feed_step(m, tenant="t0", completion=100.0 * (i + 1), tokens=4,
+                  latency=900.0 if i >= 5 else 100.0, config_cycles=50.0,
+                  exposed_config=20.0, slo_cycles=500.0)
+    now = 1_000.0
+    assert m.exposed_config_ratio(now, tenant="t0") == pytest.approx(0.4)
+    assert m.token_rate(now, tenant="t0") == pytest.approx(40.0)  # tok/kcyc
+    assert m.slo_burn_rate(now, tenant="t0") == pytest.approx(0.5)
+    a = m.alert("bridge.slo_miss", threshold=0.4, sustain=2, tenant="t0")
+    assert m.check_alerts(now) == []  # one hot epoch: debounced
+    assert m.check_alerts(now) == [a]  # sustained: fired
+
+
+def test_shed_decisions_unchanged_after_monitor_refactor():
+    """Regression pin for the SustainedThreshold refactor: on the PR 5
+    bursty two-host scenario (everything landing on h0 of an affinity
+    cluster), the trigger must make exactly the decisions the bespoke
+    streak counters made — same victims, destinations, epochs, and wait
+    numbers."""
+    profiles = [
+        TenantProfile("tight", dims=(16, 16, 16), accel="opengemm",
+                      weight=1.0),
+        TenantProfile("loose", dims=(16, 16, 16), accel="opengemm",
+                      weight=2.0),
+    ]
+    reqs = generate(profiles, rate=1 / 8, horizon=40_000, process="bursty",
+                    seed=5)
+    reqs = sorted(reqs, key=lambda r: r.arrival_time)[:400]
+    cluster = Cluster.uniform(2, {"opengemm": 1}, policy="affinity",
+                              link="noc")
+    monitor = StreamMonitor(window=5_000.0)
+    trig = ShedTrigger(MigrationPlanner(link="noc"), k=1.5, sustain=2,
+                       monitor=monitor)
+    for i, req in enumerate(reqs):
+        cluster.hosts[0].dispatch(req)
+        if (i + 1) % 50 == 0:
+            trig.observe(cluster.hosts, now=req.arrival_time)
+    got = [(d.tenant, d.src, d.dst, round(d.now, 1), round(d.src_wait, 1),
+            round(d.median_wait, 1)) for d in trig.decisions]
+    assert got == [
+        ("loose", "h0", "h1", 1513.2, 2715.1, 1357.5),
+        ("loose", "h0", "h1", 2116.2, 6318.1, 3159.0),
+        ("loose", "h0", "h1", 3097.3, 9543.0, 4771.5),
+        ("loose", "h0", "h1", 3818.1, 13028.1, 6514.1),
+    ]
+    # the monitor saw the identical pressure signal the trigger acted on
+    series = monitor.series("cluster.port_wait", host="h0")
+    assert len(series) == 1 and series[0].last() is not None
+
+
+# ------------------------------------------------------------- doctor CLI
+
+
+def _export(tmp_path, name, link, mode):
+    tracer = Tracer()
+    s = Scheduler.from_registry({"opengemm": 1, "gemmini": 1}, link=link,
+                                overlap=mode, tracer=tracer)
+    rep = s.run_open_loop(_stream())
+    path = tmp_path / name
+    write_trace(tracer, str(path), attribution=attribute(rep).check(),
+                metrics=rep.metrics)
+    return path
+
+
+def test_doctor_cli_diagnoses_and_diffs(tmp_path, capsys):
+    from repro.obs.doctor import main
+
+    ser = _export(tmp_path, "ser.json", "pcie", "serialized")
+    ov = _export(tmp_path, "ov.json", "pcie", "overlapped")
+    out = tmp_path / "doctor.json"
+    assert main([str(ser), "--against", str(ov), "--json", str(out)]) == 0
+    shown = capsys.readouterr().out
+    assert "config-wall doctor" in shown and "trace diff" in shown
+    payload = json.loads(out.read_text())
+    assert payload["diagnosis"]["regime"]["label"] == "config_bound"
+    # the serialized run reads *slower* than the overlapped baseline
+    assert payload["diff"]["makespan"]["delta"] > 0.0
+    recs = payload["diagnosis"]["recommendations"]
+    assert any(r["action"] == "enable_overlap" and r["bound"] for r in recs)
+
+
+def test_doctor_cli_rejects_attribution_free_documents(tmp_path):
+    from repro.obs.doctor import load_trace
+
+    bare = tmp_path / "bare.json"
+    bare.write_text(json.dumps({"traceEvents": []}))
+    with pytest.raises(AssertionError):
+        load_trace(str(bare))

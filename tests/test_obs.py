@@ -76,6 +76,58 @@ def test_absorb_relabels_and_folds():
     assert all(set(r) >= {"name", "kind", "labels"} for r in rows)
 
 
+def test_histogram_percentile_edges():
+    m = MetricsRegistry()
+    h = m.histogram("lat")
+    # empty: the deterministic zero, not an exception
+    assert h.percentile(50) == 0.0 and h.percentile(99) == 0.0
+    # single sample: every quantile is that sample
+    h.observe(7.0)
+    assert h.percentile(0) == h.percentile(50) == h.percentile(100) == 7.0
+    # duplicate-heavy: interpolation between equal order statistics must
+    # not drift off the plateau value
+    h2 = m.histogram("dup")
+    h2.extend([5.0] * 99 + [500.0])
+    assert h2.percentile(50) == 5.0
+    assert h2.percentile(95) == 5.0
+    assert h2.percentile(100) == 500.0
+    assert h2.count == 100 and h2.mean == pytest.approx(9.95)
+
+
+def test_absorb_disjoint_and_overlapping_label_sets():
+    parent = MetricsRegistry()
+    child = MetricsRegistry()
+    # disjoint labels: the child's device label survives beside the
+    # parent's relabel
+    child.counter("n", device="d0").add(2.0)
+    # overlapping: the child already carries host=...; absorb's extra
+    # label wins (the absorber owns the namespace it files children under)
+    child.counter("n", host="stale", device="d1").add(5.0)
+    parent.absorb(child, host="h0")
+    assert parent.total("n", host="h0", device="d0") == 2.0
+    assert parent.total("n", host="h0", device="d1") == 5.0
+    assert parent.total("n", host="stale") == 0.0
+    assert parent.total("n") == 7.0
+
+
+def test_counter_totals_are_monotone_under_host_merge():
+    """Folding host registries into a cluster registry must never lose or
+    double-book counts: after each absorb the merged total equals the sum
+    of everything absorbed so far (the conservation rule the cluster
+    report's roll-up relies on)."""
+    parent = MetricsRegistry()
+    running = 0.0
+    totals = []
+    for i, add in enumerate([3.0, 4.0, 5.0]):
+        child = MetricsRegistry()
+        child.counter("sched.launches", device="d0").add(add)
+        parent.absorb(child, host=f"h{i}")
+        running += add
+        totals.append(parent.total("sched.launches"))
+        assert totals[-1] == running
+    assert totals == sorted(totals)  # merge only ever grows a counter
+
+
 def test_percentile_is_the_shared_implementation():
     # the cluster layer re-exports the obs implementation — one definition
     assert cluster_percentile is percentile
