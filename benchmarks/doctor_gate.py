@@ -67,6 +67,42 @@ def check(doc: dict) -> list[str]:
     return problems
 
 
+def check_energy(doc: dict) -> list[str]:
+    """ISSUE 8 acceptance, re-asserted from the shipped artifact: every
+    capped cell held its watt budget in *every* window (the cap's own
+    ``held`` flag and the independently measured peak window), and the
+    cap was binding somewhere — a never-binding budget quantifies
+    nothing."""
+    problems: list[str] = []
+    delayed_anywhere = False
+    for cell in doc["cells"]:
+        tag = f"rate 1/{cell['interarrival_cycles']:.0f}"
+        cap = cell["capped"]["cap"]
+        budget = cell["budget_power"]
+        if not cap["held"]:
+            problems.append(
+                f"{tag}: cap reports a violated budget "
+                f"({cap['max_window_power']:.1f} > {budget:.1f} pJ/cycle)")
+        if cap["max_window_power"] > budget + 1e-9:
+            problems.append(
+                f"{tag}: worst cap window {cap['max_window_power']:.1f} "
+                f"pJ/cycle exceeds budget {budget:.1f}")
+        if cell["capped"]["peak_window_power"] > budget + 1e-9:
+            problems.append(
+                f"{tag}: measured peak window "
+                f"{cell['capped']['peak_window_power']:.1f} pJ/cycle "
+                f"exceeds budget {budget:.1f}")
+        if not cell["uncapped"]["peak_window_power"] > budget:
+            problems.append(
+                f"{tag}: uncapped peak never exceeded the budget — the "
+                f"cell caps nothing")
+        delayed_anywhere = delayed_anywhere or cap["delayed"] > 0
+    if not delayed_anywhere:
+        problems.append("no cell delayed a single admission — the watt "
+                        "budget was never binding")
+    return problems
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dir", default=".",
@@ -81,6 +117,15 @@ def main() -> int:
         doc = json.load(f)
     problems = check(doc)
     n = len(doc["cells"])
+
+    energy_path = os.path.join(args.dir, "BENCH_energy_slo.json")
+    n_energy = 0
+    if os.path.exists(energy_path):
+        with open(energy_path) as f:
+            energy_doc = json.load(f)
+        problems += check_energy(energy_doc)
+        n_energy = len(energy_doc["cells"])
+
     if problems:
         print(f"doctor_gate: FAIL ({len(problems)} problems over {n} cells)")
         for p in problems:
@@ -88,7 +133,9 @@ def main() -> int:
         return 1
     print(f"doctor_gate: OK — {n} cells: every serialized cell "
           f"config-bound; every overlapped fabric cell moved toward "
-          f"compute-bound (ridge down, T_set partly hidden)")
+          f"compute-bound (ridge down, T_set partly hidden)"
+          + (f"; {n_energy} energy cells held the watt budget in every "
+             f"window" if n_energy else ""))
     return 0
 
 

@@ -85,6 +85,24 @@ def check_trace(path: str) -> list[str]:
         for name, lane in att.get("lanes", {}).items():
             if lane["components"].get("idle", 0.0) < -1e-9:
                 problems.append(f"{path}: lane {name} has negative idle")
+
+    energy = doc.get("energy")
+    if energy is not None:
+        # joule edition of the same conservation invariant: per-lane
+        # components must sum to the independently metered lane total
+        residual = energy.get("max_residual")
+        if residual is None:
+            problems.append(f"{path}: energy block has no max_residual")
+        elif residual > MAX_RESIDUAL:
+            problems.append(
+                f"{path}: energy conservation drifted — max lane residual "
+                f"{residual:.3e} > {MAX_RESIDUAL:.0e} of lane energy")
+        for name, lane in energy.get("lanes", {}).items():
+            for comp, val in lane.get("components", {}).items():
+                if val < -1e-9:
+                    problems.append(
+                        f"{path}: energy lane {name} has negative "
+                        f"{comp} ({val})")
     return problems
 
 

@@ -26,12 +26,22 @@ from __future__ import annotations
 def export_trace(path: str, scenario) -> dict:
     """Run ``scenario(tracer)`` (must return a run report — scheduler,
     cluster, or bridge) and write its validated trace document to
-    ``path``. Returns the written document."""
+    ``path``. Returns the written document.
+
+    Every exported trace also carries its conservation-checked *energy*
+    attribution and per-lane ``power[...]`` counter tracks. Runs without
+    an attached :class:`~repro.power.model.PowerSpec` price every lane to
+    zero — the invariant still holds (and the CI gate still checks it),
+    the viewer just gets no extra tracks."""
     from repro.obs import Tracer, attribute, write_trace
+    from repro.obs.export import trace_power
+    from repro.power.meter import attribute_energy
 
     tracer = Tracer()
     rep = scenario(tracer)
+    energy = attribute_energy(rep).check()
+    trace_power(tracer, rep)
     doc = write_trace(tracer, path, attribution=attribute(rep).check(),
-                      metrics=rep.metrics)
+                      metrics=rep.metrics, energy=energy)
     print(f"wrote {path}")
     return doc

@@ -1,0 +1,93 @@
+"""Energy quickstart: meter a run, attribute its joules, cap the pool,
+re-run, and diff the two in joules.
+
+The loop the energy stack is meant to close:
+
+1. attach a :class:`repro.power.PowerSpec` and run a cluster — every
+   engine resource now carries an :class:`EnergyModel`, every fabric
+   transfer is priced in pJ at plan time;
+2. :func:`repro.power.attribute_energy` splits each lane's joules into
+   components under the conservation invariant (residual ≤ 0.1%, the
+   same bar the cycle attribution holds);
+3. place the run on the *energy roofline* — ops/pJ against ops per
+   config byte, ridge at ``peak_ops_per_joule / bw_e``;
+4. re-run the same request stream under a watt budget
+   (:func:`repro.cluster.powercap.run_power_capped`) and read off what
+   the cap cost — in cycles (queueing delay) *and* joules.
+
+Run: ``PYTHONPATH=src python examples/energy_quickstart.py``
+"""
+
+from repro.cluster import Cluster
+from repro.cluster.powercap import run_power_capped
+from repro.core.roofline import energy_roofline_point
+from repro.power import PowerSpec, attribute_energy, max_window_energy
+from repro.sched import LaunchRequest
+
+WINDOW = 1024.0  # cycles per power-enforcement window
+
+requests = [
+    LaunchRequest(f"t{i % 3}", (8, 16, 16),
+                  {f"f{j}": 96 * i + j for j in range(10)},
+                  accel="opengemm" if i % 2 else "gemmini",
+                  arrival_time=12.0 * i)
+    for i in range(48)
+]
+
+
+def pool():
+    return Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                           power=PowerSpec.default())
+
+
+# -- 1. meter: run with a power spec attached --------------------------------
+cluster = pool()
+report = cluster.run(list(requests))
+
+# -- 2. attribute: conservation-checked joules per lane ----------------------
+energy = attribute_energy(report).check()  # raises if any lane drifts >0.1%
+print(f"total {energy.total_energy:.0f} pJ over {energy.makespan:.0f} cycles "
+      f"(mean draw {energy.mean_power:.2f} pJ/cycle)")
+for name, lane in sorted(energy.lanes.items()):
+    parts = ", ".join(f"{k} {v:.0f}" for k, v in sorted(lane.components.items())
+                      if v > 0.0)
+    print(f"  {name:<22} {lane.total:9.0f} pJ  [{parts}]")
+config_share = energy.summary["config_energy"] / energy.total_energy
+print(f"configuration burns {config_share:.0%} of the pool's joules\n")
+
+# -- 3. the energy roofline: where does this run sit? ------------------------
+ops = sum(r.ops for r in report.records)
+nbytes = sum(r.bytes_sent for r in report.records)
+pt = energy_roofline_point(
+    "quickstart", total_ops=ops, config_bytes=max(nbytes, 1),
+    config_energy=energy.summary["config_energy"],
+    total_energy=energy.total_energy,
+    compute_power=1.0, p_peak=2.0)
+print(f"energy roofline: I_OC {pt.i_oc:.0f} ops/byte, ridge {pt.ridge:.0f} "
+      f"-> {pt.energy_bound}-energy-bound "
+      f"({pt.efficiency:.3f} of {pt.attainable:.3f} attainable ops/pJ)\n")
+
+# -- 4. cap: same stream under 70% of the uncapped peak ----------------------
+peak, _ = max_window_energy(cluster.hosts, WINDOW)
+budget = 0.7 * peak / WINDOW
+
+capped_cluster = pool()
+capped_report, cap = run_power_capped(
+    capped_cluster, list(requests), budget_power=budget, window=WINDOW)
+capped_energy = attribute_energy(capped_report).check()
+
+print(f"cap at {budget:.1f} pJ/cycle (70% of peak {peak / WINDOW:.1f}): "
+      f"held={cap.held}, {cap.delayed} admissions delayed "
+      f"(p50 {cap.p50_delay:.0f} cycles)")
+
+# -- 5. diff in joules: what did the watt budget cost? -----------------------
+d_makespan = capped_report.makespan - report.makespan
+d_joules = capped_energy.total_energy - energy.total_energy
+d_idle = capped_energy.summary["idle_energy"] - energy.summary["idle_energy"]
+print(f"diff: makespan {d_makespan:+.0f} cycles, total {d_joules:+.0f} pJ "
+      f"(idle {d_idle:+.0f} pJ — a stretched run idles longer), "
+      f"worst window {cap.max_window_power:.1f} vs uncapped "
+      f"{peak / WINDOW:.1f} pJ/cycle")
+
+assert cap.held
+assert cap.max_window_power <= budget + 1e-9

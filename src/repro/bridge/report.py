@@ -128,6 +128,63 @@ class BridgeReport:
             }
         return out
 
+    # -- energy --------------------------------------------------------------
+
+    def energy_report(self):
+        """Joule attribution of the whole bridged run — an
+        :class:`~repro.power.meter.EnergyReport` over every host's lanes
+        (empty-model lanes price to zero; the conservation invariant still
+        holds). Lazy import: the bridge stays importable without the power
+        stack loaded."""
+        from ..power.meter import attribute_energy
+        return attribute_energy(self)
+
+    def tokens_per_joule(self) -> float:
+        """The serving-efficiency figure of merit (tokens per pJ): the
+        energy-roofline twin of :attr:`tokens_per_kcycle`, and what the
+        power-capped bench trades against SLO attainment."""
+        return self.energy_report().tokens_per_joule(self.tokens)
+
+    def serving_energy_roofline(self) -> list:
+        """One *energy*-roofline point per bridged tenant
+        (:func:`~repro.core.roofline.energy_roofline_point`): ops per
+        joule attained vs. operational configuration intensity, ridge in
+        ops/J. The run's configuration energy is split across tenants in
+        proportion to descriptor bytes sent — energy attribution is
+        per-lane, not per-tenant, so the split is the documented
+        approximation (exact when one tenant dominates a lane)."""
+        from ..core.roofline import energy_roofline_point
+        er = self.energy_report()
+        config_energy = er.summary.get("config_energy", 0.0)
+        total_bytes = sum(r.bytes_sent for r in self.cluster.records)
+        kind_power = {}  # device kind -> compute active power (pJ/cycle)
+        for host in sorted(self.cluster.hosts):
+            rep = self.cluster.hosts[host]
+            for name, tel in rep.resources.items():
+                model = getattr(tel, "energy", None)
+                if tel.kind == "compute" and model is not None:
+                    # lane names are "compute[<kind>:<i>]"
+                    kind = name.split("[", 1)[1].split(":", 1)[0]
+                    kind_power.setdefault(kind, model.active_power)
+        points = []
+        for tenant, stats in sorted(self.cluster.serving.items()):
+            recs = [r for r in self.cluster.records if r.tenant == tenant]
+            if not recs:
+                continue
+            nbytes = sum(r.bytes_sent for r in recs)
+            share = nbytes / total_bytes if total_bytes else 0.0
+            kind = recs[0].device.rsplit(":", 1)[0]
+            points.append(energy_roofline_point(
+                f"serve[{tenant}]",
+                total_ops=stats.tokens * self.ops_per_token[tenant],
+                config_bytes=max(nbytes, 1),
+                config_energy=max(config_energy * share, 1e-12),
+                total_energy=max(er.total_energy * share, 1e-12),
+                compute_power=kind_power.get(kind, 1e-12),
+                p_peak=self.p_peak[tenant],
+            ))
+        return points
+
     # -- roofline ------------------------------------------------------------
 
     def serving_roofline(self) -> list[RooflinePoint]:

@@ -74,6 +74,8 @@ class Host:
         overlap: str = "serialized",
         staging_buffers: int = 2,
         transport: str = "auto",
+        objective: str = "cycles",
+        power=None,
         port: LinkPort | None = None,
         tracer=None,
     ):
@@ -86,7 +88,8 @@ class Host:
                                policy=policy, cache_enabled=cache_enabled,
                                link=link, overlap=overlap,
                                staging_buffers=staging_buffers,
-                               transport=transport, port=port,
+                               transport=transport, objective=objective,
+                               power=power, port=port,
                                tracer=bound)
         # tenants whose *slot context* (a hosted engine shard's KV cache)
         # lives on this host — the binding residency the sticky router

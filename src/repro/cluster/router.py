@@ -163,6 +163,8 @@ class Cluster:
         overlap: str = "serialized",
         staging_buffers: int = 2,
         transport: str = "auto",
+        objective: str = "cycles",
+        power=None,
         shared_port: bool = False,
         tracer=None,
     ) -> "Cluster":
@@ -176,7 +178,11 @@ class Cluster:
         ``shared_port=True`` puts every host behind **one** cluster-level
         :class:`~repro.fabric.link.LinkPort` — the PCIe-switch topology,
         where all hosts' config transfers contend FIFO on a single wire
-        instead of each owning a private one; ``tracer`` attaches one
+        instead of each owning a private one; ``power`` attaches a
+        :class:`~repro.power.model.PowerSpec` to every host's engine
+        resources (observation-only joule metering) and ``objective``
+        sets what "cheaper" means for the auto transport choice
+        (``cycles``/``joules``/``edp``); ``tracer`` attaches one
         :class:`~repro.obs.trace.Tracer` across every host (each shard
         binds its host id into the spans it emits)."""
         port = None
@@ -189,7 +195,8 @@ class Cluster:
                                cache_enabled=cache_enabled, link=link,
                                overlap=overlap,
                                staging_buffers=staging_buffers,
-                               transport=transport, port=port, tracer=tracer)
+                               transport=transport, objective=objective,
+                               power=power, port=port, tracer=tracer)
             for i in range(n_hosts)
         ]
         return cls(hosts, policy=policy, seed=seed, sticky=sticky,

@@ -215,6 +215,88 @@ def decode_roofline_point(
 
 
 # --------------------------------------------------------------------------
+# the energy roofline — Eq. 4 along the joule axis
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EnergyRooflinePoint:
+    """One measurement on the *energy* roofline ("Know your rooflines!"
+    extended per-Watt): efficiency (ops/pJ) against configuration energy
+    intensity, with the same harmonic composition as the cycle plot.
+
+    The analogy is exact. Cycles: work and configuration serialize in
+    *time*, so attainable ops/cycle = 1/(1/P_peak + 1/(BW_cfg·I_OC)).
+    Joules: every op and every config byte costs *energy*, so attainable
+    ops/pJ = 1/(1/peak_ops_per_joule + 1/(bw_e·I_OC)) where ``bw_e`` is
+    config bytes per joule of configuration energy — and the ridge sits
+    at I_OC = peak_ops_per_joule / bw_e, in ops per joule-normalized
+    byte. Runtime overlap does **not** save config joules (the handshakes
+    happen either way), but descriptor elision and burst DMA do — they
+    raise ``bw_e`` and shift the energy ridge left, exactly as exposed
+    T_set reduction shifts the cycle ridge."""
+
+    name: str
+    i_oc: float  # ops per config byte — same x-axis as the cycle plot
+    efficiency: float  # achieved ops/pJ (total_ops / total_energy)
+    peak_ops_per_joule: float  # datapath efficiency at full tilt
+    bw_energy: float  # config bytes per pJ of configuration energy
+
+    @property
+    def attainable(self) -> float:
+        """Roofline ceiling at this I_OC, ops/pJ (harmonic composition —
+        the sequential/energy analogue of Eq. 5)."""
+        return 1.0 / (1.0 / self.peak_ops_per_joule
+                      + 1.0 / (self.bw_energy * self.i_oc))
+
+    @property
+    def ridge(self) -> float:
+        """I_OC where config and compute burn equal joules — left of it,
+        the workload is configuration-*energy*-bound."""
+        return self.peak_ops_per_joule / self.bw_energy
+
+    @property
+    def energy_bound(self) -> str:
+        return "configuration" if self.i_oc < self.ridge else "compute"
+
+    @property
+    def utilization(self) -> float:
+        """Achieved fraction of the datapath's peak efficiency."""
+        return self.efficiency / self.peak_ops_per_joule
+
+
+def energy_roofline_point(
+    name: str,
+    *,
+    total_ops: float,
+    config_bytes: float,
+    config_energy: float,
+    total_energy: float,
+    compute_power: float,
+    p_peak: float,
+) -> EnergyRooflinePoint:
+    """Place one run on the energy roofline (tokens/ops per joule).
+
+    ``config_energy`` is the run's configuration joules — host instruction
+    issue plus wire transfer energy, i.e. ``repro.power`` 's metered
+    ``summary["config_energy"]`` — playing T_set's role: ``bw_e`` =
+    config bytes per config joule, so cheaper transport (burst DMA,
+    elision) raises it and moves the ridge left. ``compute_power`` is the
+    datapath's active pJ/cycle, giving peak efficiency ``p_peak /
+    compute_power`` ops/pJ. For serving, pass token counts as
+    ``total_ops`` to read tokens-per-joule off the same plot."""
+    peak_opj = p_peak / max(compute_power, 1e-12)
+    bw_e = config_bytes / max(config_energy, 1e-12)
+    return EnergyRooflinePoint(
+        name=name,
+        i_oc=total_ops / max(config_bytes, 1e-12),
+        efficiency=total_ops / total_energy if total_energy else 0.0,
+        peak_ops_per_joule=peak_opj,
+        bw_energy=bw_e,
+    )
+
+
+# --------------------------------------------------------------------------
 # §4.6 worked example: Gemmini output-stationary 64×64×64 matmul
 # --------------------------------------------------------------------------
 

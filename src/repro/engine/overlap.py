@@ -122,7 +122,8 @@ class OverlapPolicy:
             # the shadow bank must be free before the DMA may fill it
             earliest = max(earliest, self.bank_free(dev_id))
         w = port.acquire(earliest, xfer.link_cycles, nbytes=xfer.nbytes,
-                         tag=tag, mode=xfer.mode)
+                         tag=tag, mode=xfer.mode,
+                         energy=getattr(xfer, "wire_energy", None))
         release = h.end if asynchronous else max(h.end, w.end)
         if self.tracer is not None and asynchronous:
             # the host was released at descriptor enqueue; note how long

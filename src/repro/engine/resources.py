@@ -73,6 +73,11 @@ class Resource:
         self.kind = kind
         self.free = 0.0  # committed time: the clock of this resource
         self.log: list[Interval] = []
+        # optional repro.power.EnergyModel attached by the scheduler when a
+        # PowerSpec is in play — observation-only (never consulted by any
+        # reserve/when/backlog path), read by the energy meter and the
+        # windowed power monitor
+        self.energy = None
 
     # -- queries (side-effect free) ------------------------------------------
 

@@ -56,6 +56,15 @@ class LinkModel:
     burst_setup: float = 0.0  # cycles to program one DMA burst descriptor
     max_burst: int = 4096  # payload bytes one burst descriptor may carry
     hops: int = 0  # topological distance (0 = core-local)
+    # -- energy rates (pJ) — the joule axis the cycle model is blind to.
+    # MMIO pays a handshake per ordered write; burst DMA pays a descriptor
+    # setup per burst plus a streaming cost per byte. The per-byte cost is
+    # shared, so the cycle-cheaper and joule-cheaper mode can differ: burst
+    # amortizes *latency* aggressively but its descriptor setup energy can
+    # exceed a few MMIO handshakes (transport.plan_fields(objective=...))
+    mmio_write_energy: float = 0.0  # pJ per ordered register-write handshake
+    byte_energy: float = 0.0  # pJ per payload byte streamed, either mode
+    burst_setup_energy: float = 0.0  # pJ to build + launch one DMA descriptor
 
     def write_cycles(self, nbytes: float) -> float:
         """One ordered register write of ``nbytes`` crossing the link."""
@@ -73,22 +82,47 @@ class LinkModel:
         bursts = max(1, math.ceil(nbytes / self.max_burst))
         return bursts * (self.burst_setup + self.latency) + nbytes / self.bandwidth
 
+    def transfer_energy(self, mode: str, nbytes: float,
+                        n_writes: int | None = None) -> float:
+        """Wire energy (pJ) of moving ``nbytes`` in ``mode``. When the MMIO
+        write count is not known (e.g. a migration snapshot priced outside
+        ``fabric.transport``), each write is assumed to carry ``max_burst``
+        — a lower bound on handshake count. ``transport.TransferSchedule``
+        passes the exact count, so launch traffic never takes the guess."""
+        if nbytes <= 0:
+            return 0.0
+        streamed = nbytes * self.byte_energy
+        if mode == "burst":
+            bursts = max(1, math.ceil(nbytes / self.max_burst))
+            return bursts * self.burst_setup_energy + streamed
+        if n_writes is None:
+            n_writes = max(1, math.ceil(nbytes / self.max_burst))
+        return n_writes * self.mmio_write_energy + streamed
+
 
 def csr_local() -> LinkModel:
     """Core-local CSR port — the paper's host model. Zero wire cost, so the
     pre-fabric scheduler numbers are reproduced exactly; no DMA engine (a
     core writes its own CSRs faster than it could program a descriptor)."""
     return LinkModel(name="csr", kind="csr", latency=0.0,
-                     bandwidth=float("inf"), supports_dma=False, hops=0)
+                     bandwidth=float("inf"), supports_dma=False, hops=0,
+                     mmio_write_energy=0.5, byte_energy=0.05)
 
 
 def noc(hops: int = 1) -> LinkModel:
     """On-chip network: ~12 cycles of router/wire latency per hop, 8 B/cycle
     links, a lightweight cluster DMA (cf. the Snitch/Occamy iDMA path)."""
     assert hops >= 1
+    # energy scales with distance: every hop's router switches per flit
+    # (per-byte) and per handshake; the DMA descriptor setup energy is
+    # deliberately the expensive term — on-chip it buys little over a few
+    # cheap MMIO handshakes, so the joule-optimal crossover sits *later*
+    # than the cycle-optimal one (pinned in tests/test_power.py)
     return LinkModel(name=f"noc{hops}" if hops > 1 else "noc", kind="noc",
                      latency=12.0 * hops, bandwidth=8.0, supports_dma=True,
-                     burst_setup=24.0, max_burst=1024, hops=hops)
+                     burst_setup=24.0, max_burst=1024, hops=hops,
+                     mmio_write_energy=6.0 * hops, byte_energy=0.3 * hops,
+                     burst_setup_energy=48.0 * hops)
 
 
 def pcie() -> LinkModel:
@@ -96,7 +130,8 @@ def pcie() -> LinkModel:
     DMA descriptors are expensive to build but carry 4 KiB bursts."""
     return LinkModel(name="pcie", kind="pcie", latency=350.0, bandwidth=4.0,
                      supports_dma=True, burst_setup=96.0, max_burst=4096,
-                     hops=1)
+                     hops=1, mmio_write_energy=150.0, byte_energy=1.0,
+                     burst_setup_energy=400.0)
 
 
 LINKS: dict[str, LinkModel] = {
@@ -129,6 +164,7 @@ class Transfer:
     nbytes: int
     tag: str  # tenant / purpose
     mode: str  # "mmio" | "burst"
+    energy: float = 0.0  # pJ this transfer burned on the wire
 
     @property
     def cycles(self) -> float:
@@ -167,13 +203,22 @@ class LinkPort:
         return self.res.backlog(now)
 
     def acquire(self, now: float, cycles: float, *, nbytes: int = 0,
-                tag: str = "", mode: str = "mmio") -> Transfer:
+                tag: str = "", mode: str = "mmio",
+                energy: float | None = None) -> Transfer:
         """Occupy the link for ``cycles`` starting no earlier than ``now``
         (a busy wire pushes the transfer back — bandwidth sharing as FIFO
-        serialization). Returns the resolved transfer."""
+        serialization). Returns the resolved transfer.
+
+        ``energy`` is the transfer's wire joules; callers that priced the
+        transfer (``transport.TransferSchedule``) pass the exact figure so
+        the meter reads plan-time numbers verbatim. ``None`` falls back to
+        the link's own estimate — migration snapshots and other non-launch
+        traffic, where the MMIO write count is not known here."""
+        if energy is None:
+            energy = self.link.transfer_energy(mode, nbytes)
         iv = self.res.reserve(now, cycles, tag=tag)
         xfer = Transfer(start=iv.start, end=iv.end, nbytes=int(nbytes),
-                        tag=tag, mode=mode)
+                        tag=tag, mode=mode, energy=float(energy))
         self.log.append(xfer)
         if self.tracer is not None and cycles > 0.0:
             self.tracer.span(mode, "wire", iv.start, iv.end, lane=self.name,
@@ -189,6 +234,11 @@ class LinkPort:
     @property
     def bytes_moved(self) -> int:
         return sum(t.nbytes for t in self.log)
+
+    @property
+    def transfer_joules(self) -> float:
+        """Total wire energy (pJ) of every logged transfer."""
+        return sum(t.energy for t in self.log)
 
     def occupancy(self, makespan: float) -> float:
         """Fraction of the run the wire was busy."""

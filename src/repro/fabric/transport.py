@@ -33,6 +33,12 @@ from .link import LinkModel
 
 MODES = ("mmio", "burst")
 
+# pJ one host control-thread cycle costs while issuing config instructions
+# — kept here (not on a PowerSpec) because the transport layer must price a
+# schedule's joules at *plan* time, before any scheduler exists; the meter
+# (repro.power) uses the same constant so the two can never disagree
+HOST_ENERGY_PER_CYCLE = 1.0
+
 
 @dataclass(frozen=True)
 class TransferSchedule:
@@ -44,12 +50,25 @@ class TransferSchedule:
     nbytes: int  # config payload on the wire, launch write included
     host_cycles: float  # host instruction time (T_calc + issue)
     link_cycles: float  # time on the wire
+    host_energy: float = 0.0  # pJ of host instruction issue
+    wire_energy: float = 0.0  # pJ on the wire (handshakes/descriptors+bytes)
 
     @property
     def t_set(self) -> float:
         """Eq. 4's configuration term for this launch: the host is captive
         for its instruction time and (conservatively) the wire time."""
         return self.host_cycles + self.link_cycles
+
+    @property
+    def energy(self) -> float:
+        """Configuration energy of this launch, pJ — the joule analogue of
+        :attr:`t_set`."""
+        return self.host_energy + self.wire_energy
+
+    @property
+    def edp(self) -> float:
+        """Energy-delay product (pJ·cycles) — the balanced objective."""
+        return self.energy * self.t_set
 
 
 def mmio_schedule(n_fields: int, model: AcceleratorModel,
@@ -60,13 +79,17 @@ def mmio_schedule(n_fields: int, model: AcceleratorModel,
     payload = model.fields_per_write * model.bytes_per_field
     wire = (link.mmio_cycles(writes, payload)
             + link.write_cycles(model.bytes_per_field))  # the launch write
+    nbytes = (n_fields + 1) * model.bytes_per_field
     return TransferSchedule(
         mode="mmio",
         link=link.name,
         n_fields=n_fields,
-        nbytes=(n_fields + 1) * model.bytes_per_field,
+        nbytes=nbytes,
         host_cycles=host,
         link_cycles=wire,
+        host_energy=host * HOST_ENERGY_PER_CYCLE,
+        # writes + 1: the launch write is an ordered handshake too
+        wire_energy=link.transfer_energy("mmio", nbytes, n_writes=writes + 1),
     )
 
 
@@ -86,46 +109,69 @@ def burst_schedule(n_fields: int, model: AcceleratorModel,
         nbytes=nbytes,
         host_cycles=host,
         link_cycles=link.burst_cycles(nbytes),
+        host_energy=host * HOST_ENERGY_PER_CYCLE,
+        wire_energy=link.transfer_energy("burst", nbytes),
     )
 
 
 TRANSPORTS = ("auto", "mmio", "burst")
 
+# what "cheaper" means when mode="auto" compares the two disciplines:
+# cycles is the historical (and default) axis; joules and energy-delay
+# product can disagree with it, because burst DMA amortizes *latency*
+# aggressively while its descriptor setup *energy* is the expensive term
+OBJECTIVES = ("cycles", "joules", "edp")
+
+_OBJECTIVE_KEYS = {
+    "cycles": lambda s: s.t_set,
+    "joules": lambda s: s.energy,
+    "edp": lambda s: s.edp,
+}
+
 
 def plan_fields(n_fields: int, model: AcceleratorModel, link: LinkModel,
-                mode: str = "auto") -> TransferSchedule:
+                mode: str = "auto",
+                objective: str = "cycles") -> TransferSchedule:
     """Price an ``n_fields``-register plan. ``mode="auto"`` (the default)
-    picks the cheaper of MMIO and burst DMA, ties to MMIO — no descriptor
-    to build. ``"mmio"`` forces per-register writes (the paper's baseline
-    discipline, and the doctor's counterfactual knob); ``"burst"`` forces
-    the DMA path, falling back to MMIO on links without a DMA engine."""
+    picks the cheaper of MMIO and burst DMA under ``objective`` — cycles
+    (``t_set``, the historical behaviour, default), joules (``energy``),
+    or ``edp`` — ties to MMIO: no descriptor to build. ``"mmio"`` forces
+    per-register writes (the paper's baseline discipline, and the doctor's
+    counterfactual knob); ``"burst"`` forces the DMA path, falling back to
+    MMIO on links without a DMA engine."""
     assert mode in TRANSPORTS, mode
+    assert objective in OBJECTIVES, objective
     mmio = mmio_schedule(n_fields, model, link)
     if mode == "mmio":
         return mmio
     burst = burst_schedule(n_fields, model, link)
     if burst is None:
         return mmio
-    if mode == "burst" or burst.t_set < mmio.t_set:
+    key = _OBJECTIVE_KEYS[objective]
+    if mode == "burst" or key(burst) < key(mmio):
         return burst
     return mmio
 
 
-def plan_transfer(plan, model: AcceleratorModel,
-                  link: LinkModel) -> TransferSchedule:
+def plan_transfer(plan, model: AcceleratorModel, link: LinkModel,
+                  objective: str = "cycles") -> TransferSchedule:
     """Price a ``sched.state_cache.WritePlan``'s sent set (duck-typed so
     the fabric layer stays import-free of ``repro.sched``)."""
-    return plan_fields(len(plan.sent), model, link)
+    return plan_fields(len(plan.sent), model, link, objective=objective)
 
 
 def crossover_fields(model: AcceleratorModel, link: LinkModel,
-                     limit: int = 1024) -> int | None:
+                     limit: int = 1024,
+                     objective: str = "cycles") -> int | None:
     """Smallest plan size at which burst DMA beats per-register MMIO on
-    this (device, link) pair — ``None`` if MMIO wins up to ``limit``
-    (always the case on a core-local CSR port)."""
+    this (device, link) pair under ``objective`` — ``None`` if MMIO wins
+    up to ``limit`` (always the case on a core-local CSR port under
+    cycles). The joule crossover sits later than the cycle one wherever
+    the descriptor setup energy outweighs a few MMIO handshakes."""
     if not link.supports_dma:
         return None
+    key = _OBJECTIVE_KEYS[objective]
     for n in range(1, limit + 1):
-        if burst_schedule(n, model, link).t_set < mmio_schedule(n, model, link).t_set:
+        if key(burst_schedule(n, model, link)) < key(mmio_schedule(n, model, link)):
             return n
     return None

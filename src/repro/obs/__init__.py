@@ -52,7 +52,7 @@ from .attribution import AttributionReport, LaneAttribution, attribute
 from .diagnose import Diagnosis, Recommendation, Regime, classify
 from .diagnose import classify_cell, diagnose_doc
 from .diagnose import diagnose as diagnose_report
-from .export import chrome_trace, validate_trace, write_trace
+from .export import chrome_trace, trace_power, validate_trace, write_trace
 from .metrics import (
     Counter,
     Gauge,

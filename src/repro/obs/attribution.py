@@ -153,6 +153,11 @@ def _launch_records(rep) -> list:
     return out
 
 
+# public alias: repro.power.meter classifies wire-transfer *energy* with
+# the same launch-record matching this module uses for wire cycles
+launch_records = _launch_records
+
+
 def _host_lane(rep, makespan: float, records: list,
                lane_name: str) -> LaneAttribution:
     tel = next(t for t in rep.resources.values() if t.kind == "host")
@@ -191,7 +196,7 @@ def _wire_lane(link_tel, makespan: float, records: list,
                                []).append((rec, alive))
     exposed = overlapped = preempted = other = 0.0
     intervals = []
-    for start, end, _nbytes, _tag, _mode in link_tel.log:
+    for start, end, *_rest in link_tel.log:
         length = end - start
         if length <= 0.0:
             continue  # zero-cost CSR "transfers" occupy nothing

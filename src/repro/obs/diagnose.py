@@ -77,7 +77,15 @@ class Regime:
 
 @dataclass(frozen=True)
 class Recommendation:
-    """One ranked mitigation, quantified when a replay could price it."""
+    """One ranked mitigation, quantified when a replay could price it.
+
+    Priced on both axes where the replay allows: ``predicted_savings``
+    (cycles) and ``predicted_joule_savings`` (configuration pJ —
+    negative means the knob *costs* energy, e.g. burst-DMA descriptor
+    setup below the link's joule crossover). ``axes_disagree`` marks a
+    knob that wins one axis while losing the other; the doctor's
+    transcript calls these out so a perf-per-Watt deployment doesn't
+    apply a cycle win that regresses tokens/J."""
 
     action: str
     why: str
@@ -85,6 +93,8 @@ class Recommendation:
     knob: dict = field(default_factory=dict)
     whatif: object | None = None  # the backing obs.whatif.WhatIf, if any
     bound: bool = False  # savings is an upper bound, not a replay
+    predicted_joule_savings: float | None = None  # config pJ; None = unpriced
+    axes_disagree: bool = False
 
     def to_dict(self) -> dict:
         d = {
@@ -93,6 +103,8 @@ class Recommendation:
             "predicted_savings": self.predicted_savings,
             "knob": dict(self.knob),
             "bound": self.bound,
+            "predicted_joule_savings": self.predicted_joule_savings,
+            "axes_disagree": self.axes_disagree,
         }
         if self.whatif is not None:
             d["whatif"] = self.whatif.to_dict()
@@ -107,6 +119,7 @@ class Diagnosis:
     lanes: dict  # lane name -> {"kind", "busy_share", "dominant", "label"}
     recommendations: list  # Recommendation, ranked by predicted savings
     stats: dict  # the numbers classify() saw
+    notes: list = field(default_factory=list)  # cross-axis caveats
 
     def to_dict(self) -> dict:
         return {
@@ -114,6 +127,7 @@ class Diagnosis:
             "lanes": {k: dict(v) for k, v in self.lanes.items()},
             "recommendations": [r.to_dict() for r in self.recommendations],
             "stats": dict(self.stats),
+            "notes": list(self.notes),
         }
 
     def render(self) -> str:
@@ -140,9 +154,14 @@ class Diagnosis:
                 else:
                     kind = "≤" if rec.bound else "≈"
                     quant = f"{kind} {rec.predicted_savings:.1f} cycles"
-                out.append(f"  {i}. {rec.action}: {quant} — {rec.why}")
+                if rec.predicted_joule_savings is not None:
+                    quant += f", {rec.predicted_joule_savings:+.1f} pJ config"
+                flag = "  [!] axes disagree" if rec.axes_disagree else ""
+                out.append(f"  {i}. {rec.action}: {quant} — {rec.why}{flag}")
         else:
             out.append("recommendations: none — nothing left to hide")
+        for note in self.notes:
+            out.append(f"note: {note}")
         return "\n".join(out)
 
 
@@ -269,8 +288,14 @@ def _quantified(report) -> list[Recommendation]:
             if wi is None or wi.predicted_savings <= 0.0:
                 continue
             slot = per_action.setdefault(
-                wi.action, {"savings": 0.0, "knob": wi.knob, "whatif": wi})
+                wi.action, {"savings": 0.0, "joules": 0.0, "priced": True,
+                            "knob": wi.knob, "whatif": wi})
             slot["savings"] += wi.predicted_savings
+            joules = wi.predicted_joule_savings
+            if joules is None:
+                slot["priced"] = False  # one unpriceable wire poisons the sum
+            else:
+                slot["joules"] += joules
             if wi.predicted_savings > slot["whatif"].predicted_savings:
                 slot["whatif"] = wi
     why = {
@@ -281,12 +306,18 @@ def _quantified(report) -> list[Recommendation]:
         "staging_buffers": "one more configuration bank deepens the "
                            "config/compute pipeline",
     }
-    return [
-        Recommendation(action=action, why=why.get(action, action),
-                       predicted_savings=slot["savings"],
-                       knob=slot["knob"], whatif=slot["whatif"])
-        for action, slot in per_action.items()
-    ]
+    out = []
+    for action, slot in per_action.items():
+        joules = slot["joules"] if slot["priced"] else None
+        out.append(Recommendation(
+            action=action, why=why.get(action, action),
+            predicted_savings=slot["savings"],
+            knob=slot["knob"], whatif=slot["whatif"],
+            predicted_joule_savings=joules,
+            axes_disagree=(joules is not None
+                           and (slot["savings"] > 0.0 > joules
+                                or joules > 0.0 > slot["savings"]))))
+    return out
 
 
 def _heuristics(report) -> list[Recommendation]:
@@ -339,7 +370,36 @@ def diagnose(report) -> Diagnosis:
             "exposed_config": exposed,
             "config_cycles": config,
             **{f"{k}_busy": v for k, v in busy.items()},
-        })
+        },
+        notes=_axis_notes(recs))
+
+
+def _axis_notes(recs: list) -> list[str]:
+    """Cross-axis caveats: per-knob disagreements, plus a ranking flip
+    when the best cycle saver is not the best joule saver — the exact
+    case where 'make it faster' and 'make it cheaper per token' pick
+    different knobs."""
+    notes = []
+    for rec in recs:
+        if rec.axes_disagree:
+            notes.append(
+                f"{rec.action} saves {rec.predicted_savings:.1f} cycles but "
+                f"changes config energy by "
+                f"{-rec.predicted_joule_savings:+.1f} pJ — a cycle win that "
+                f"costs joules; rank by objective='joules' before applying "
+                f"on a power-capped pool")
+    priced = [r for r in recs if r.predicted_savings is not None
+              and r.predicted_joule_savings is not None]
+    if len(priced) > 1:
+        by_cycles = max(priced, key=lambda r: r.predicted_savings)
+        by_joules = max(priced, key=lambda r: r.predicted_joule_savings)
+        if by_cycles.action != by_joules.action:
+            notes.append(
+                f"ranking depends on the axis: {by_cycles.action} saves the "
+                f"most cycles ({by_cycles.predicted_savings:.1f}) but "
+                f"{by_joules.action} saves the most configuration energy "
+                f"({by_joules.predicted_joule_savings:.1f} pJ)")
+    return notes
 
 
 # -- diagnosis from a serialized trace ----------------------------------------

@@ -28,8 +28,9 @@ import json
 
 from .trace import Tracer
 
-# thread ordering inside a process: engine resources first, then tenants
-_LANE_ORDER = (("host", 0), ("cfg[", 1), ("compute[", 2),
+# thread ordering inside a process: engine resources first, then power
+# counter lanes, then tenants
+_LANE_ORDER = (("host", 0), ("cfg[", 1), ("compute[", 2), ("power[", 30),
                ("tenant[", 40), ("step[", 50), ("tokens[", 60))
 
 
@@ -138,18 +139,37 @@ def validate_trace(doc: dict) -> list[str]:
     return problems
 
 
+def trace_power(tracer: Tracer, report) -> None:
+    """Emit per-lane ``power[<lane>]`` counter samples onto ``tracer``
+    from a finished report's resource telemetry: each lane steps to its
+    active draw at every busy-interval edge (pJ/cycle — reads as mW at
+    1 GHz in the viewer). No-op for runs without an attached PowerSpec."""
+    from ..power.meter import power_counter_series
+    for lane, points in power_counter_series(report).items():
+        host, _, res = lane.rpartition("/")
+        for ts, watts in points:
+            if host:
+                tracer.counter(f"power[{res}]", ts, watts, lane=f"power[{res}]",
+                               host=host)
+            else:
+                tracer.counter(f"power[{res}]", ts, watts, lane=f"power[{res}]")
+
+
 def write_trace(tracer: Tracer, path: str, *, attribution=None,
-                metrics=None) -> dict:
+                metrics=None, energy=None) -> dict:
     """Export ``tracer`` to ``path`` as Perfetto-loadable JSON; returns the
     written document. ``attribution`` (an
-    :class:`~repro.obs.attribution.AttributionReport`) and ``metrics`` (a
-    :class:`~repro.obs.metrics.MetricsRegistry`) are embedded as extra
+    :class:`~repro.obs.attribution.AttributionReport`), ``metrics`` (a
+    :class:`~repro.obs.metrics.MetricsRegistry`), and ``energy`` (a
+    :class:`~repro.power.meter.EnergyReport`) are embedded as extra
     top-level keys — trace viewers ignore them, the CI gate reads them."""
     doc = chrome_trace(tracer)
     if attribution is not None:
         doc["attribution"] = attribution.to_dict()
     if metrics is not None:
         doc["metrics"] = metrics.collect()
+    if energy is not None:
+        doc["energy"] = energy.to_dict()
     problems = validate_trace(doc)
     assert not problems, problems
     with open(path, "w") as f:

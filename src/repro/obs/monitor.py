@@ -201,6 +201,15 @@ class StreamMonitor:
         tokens = self.windowed_sum("bridge.tokens", now, **match)
         return tokens / self.default_window * 1_000.0
 
+    def power_draw(self, now: float, **match) -> float:
+        """Mean draw over the window, pJ/cycle (≡ mW at 1 GHz): windowed
+        joules under the canonical ``power.energy`` name (per host with
+        ``host=...``, pool-wide without) over the window length. The
+        cluster power cap (``cluster.powercap``) feeds this signal and
+        thresholds a :class:`SustainedThreshold` on it."""
+        joules = self.windowed_sum("power.energy", now, **match)
+        return joules / self.default_window
+
     # -- alerts ---------------------------------------------------------------
 
     def alert(self, name: str, *, threshold: float, above: bool = True,

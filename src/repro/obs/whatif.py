@@ -31,7 +31,7 @@ from ..fabric.transport import burst_schedule, mmio_schedule
 
 __all__ = [
     "LaunchRow", "Replay", "WhatIf",
-    "extract_rows", "replay",
+    "extract_rows", "replay", "rows_config_energy",
     "predict_overlap", "predict_burst", "predict_staging",
 ]
 
@@ -61,13 +61,24 @@ class Replay:
 
 @dataclass(frozen=True)
 class WhatIf:
-    """One quantified recommendation: knob → predicted effect."""
+    """One quantified recommendation: knob → predicted effect.
+
+    Mitigations are priced on *two* axes. Cycles: the replay difference.
+    Joules: the change in configuration energy (host issue + wire
+    handshakes/descriptors, re-priced per launch through the link's
+    energy rates). The axes can disagree — runtime overlap hides T_set
+    without saving a single transfer joule, and burst DMA can win cycles
+    while its descriptor-setup energy loses joules below the link's
+    joule-crossover — and :attr:`axes_disagree` is how the doctor says
+    so."""
 
     action: str  # "enable_overlap" | "burst_dma" | "staging_buffers"
     knob: dict  # scheduler kwargs realizing the suggestion
     baseline_makespan: float  # the run's actual makespan
     predicted_makespan: float
     predicted_savings: float  # baseline replay − modified replay
+    baseline_config_energy: float | None = None  # pJ, None = unpriceable
+    predicted_config_energy: float | None = None
     detail: dict = field(default_factory=dict)
 
     @property
@@ -75,6 +86,23 @@ class WhatIf:
         if self.predicted_makespan <= 0.0:
             return 1.0
         return self.baseline_makespan / self.predicted_makespan
+
+    @property
+    def predicted_joule_savings(self) -> float | None:
+        if self.baseline_config_energy is None:
+            return None
+        return self.baseline_config_energy - self.predicted_config_energy
+
+    @property
+    def axes_disagree(self) -> bool:
+        """Does this knob save cycles while *costing* configuration
+        joules (or vice versa)? Zero joule delta (overlap, staging) is
+        agreement — nothing was spent to buy the cycles."""
+        joules = self.predicted_joule_savings
+        if joules is None:
+            return False
+        return (self.predicted_savings > 0.0 > joules
+                or joules > 0.0 > self.predicted_savings)
 
     def to_dict(self) -> dict:
         return {
@@ -84,6 +112,10 @@ class WhatIf:
             "predicted_makespan": self.predicted_makespan,
             "predicted_savings": self.predicted_savings,
             "predicted_speedup": self.predicted_speedup,
+            "baseline_config_energy": self.baseline_config_energy,
+            "predicted_config_energy": self.predicted_config_energy,
+            "predicted_joule_savings": self.predicted_joule_savings,
+            "axes_disagree": self.axes_disagree,
             "detail": dict(self.detail),
         }
 
@@ -216,6 +248,28 @@ def replay(rows: list[LaunchRow], *, mode: str, buffers: int = 2,
                   config_cycles=config)
 
 
+def rows_config_energy(rows, models, link: LinkModel | None) -> float | None:
+    """Total configuration energy (pJ) of a row list under ``link``'s
+    energy rates: each launch re-priced through the schedule its
+    ``xfer_mode`` names (host issue energy + wire handshake/descriptor +
+    streamed bytes). This is the joule axis of every what-if: replay
+    timing never enters — moving a transfer in time (overlap, staging)
+    leaves its energy untouched, while re-pricing it (burst) does not.
+    ``None`` when the report's wire is unpriceable (no/mixed links)."""
+    if link is None:
+        return None
+    total = 0.0
+    for r in rows:
+        model = models[r.dev]
+        xfer = None
+        if r.xfer_mode == "burst":
+            xfer = burst_schedule(r.n_fields, model, link)
+        if xfer is None:
+            xfer = mmio_schedule(r.n_fields, model, link)
+        total += xfer.energy
+    return total
+
+
 # -- estimators --------------------------------------------------------------
 
 
@@ -233,12 +287,18 @@ def _estimate(rep, action: str, knob: dict, base_rows, base_kw: dict,
         "replay_error": err,
         "exposed_config_after": mod.exposed_config,
     })
+    link = report_link(rep)
+    models = {dev_id: tel.model for dev_id, tel in rep.devices.items()}
+    base_e = rows_config_energy(base_rows, models, link)
+    mod_e = rows_config_energy(mod_rows, models, link)
     return WhatIf(
         action=action,
         knob=knob,
         baseline_makespan=actual,
         predicted_makespan=actual - savings,
         predicted_savings=savings,
+        baseline_config_energy=base_e,
+        predicted_config_energy=mod_e,
         detail=d,
     )
 

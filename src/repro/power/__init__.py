@@ -1,0 +1,48 @@
+"""repro.power — the joule axis of the configuration wall.
+
+Energy models for engine resources (:mod:`~repro.power.model`), a
+conservation-checked joule attribution + windowed power meter over
+finished runs and live engines (:mod:`~repro.power.meter`), and the
+plan-time transfer pricing lives with the fabric
+(``fabric.link.LinkModel`` energy rates, ``fabric.transport``'s
+``objective`` knob) so mode choice and metering read the same numbers.
+"""
+
+from .meter import (
+    EnergyLane,
+    EnergyReport,
+    PoolEnergySnapshot,
+    attribute_energy,
+    host_window_energy,
+    max_window_energy,
+    pool_window_energy,
+    pool_window_power,
+    power_counter_series,
+    resource_window_energy,
+    transfers_window_energy,
+)
+from .model import (
+    DEFAULT_ENERGY_PER_OP,
+    HOST_ACTIVE_POWER,
+    ZERO_ENERGY,
+    EnergyModel,
+    PowerSpec,
+)
+
+__all__ = [
+    "DEFAULT_ENERGY_PER_OP",
+    "HOST_ACTIVE_POWER",
+    "ZERO_ENERGY",
+    "EnergyLane",
+    "EnergyModel",
+    "EnergyReport",
+    "PowerSpec",
+    "attribute_energy",
+    "host_window_energy",
+    "max_window_energy",
+    "pool_window_energy",
+    "pool_window_power",
+    "power_counter_series",
+    "resource_window_energy",
+    "transfers_window_energy",
+]

@@ -132,6 +132,8 @@ class Scheduler:
         overlap: str = "serialized",
         staging_buffers: int = 2,
         transport: str = "auto",
+        objective: str = "cycles",
+        power=None,
         port: LinkPort | None = None,
         tracer=None,
     ):
@@ -141,6 +143,15 @@ class Scheduler:
         # force one side — the counterfactual knob obs.whatif validates
         # its burst-DMA predictions against
         self.transport = transport
+        # what "cheaper" means under "auto": cycles (default, historical
+        # behaviour bit-exactly), joules, or edp — the one place energy
+        # rates are allowed to change *timing* (fabric.transport.OBJECTIVES)
+        self.objective = objective
+        # optional repro.power.PowerSpec: attaches observation-only
+        # EnergyModels to the host/wire/compute resources so the energy
+        # meter (repro.power.meter) and windowed power monitor can price
+        # this run's busy intervals in joules; never consulted by dispatch
+        self.power = power
         if pool is None:
             pool = {name: model for name, model in REGISTRY.items()}
         # one label-set registry per scheduler (repro.obs.metrics): every
@@ -175,6 +186,14 @@ class Scheduler:
             wire=self.port.res,
             compute={d.id: d.queue.compute for d in self.devices},
         )
+        if power is not None:
+            self.res.host.energy = power.host
+            # a shared port keeps the first sharer's wire model: one
+            # physical link, one standing burn, metered once cluster-wide
+            if self.res.wire.energy is None:
+                self.res.wire.energy = power.wire_model(self.link.kind)
+            for d in self.devices:
+                d.queue.compute.energy = power.compute_model(d.model.name)
         # serialized = pre-engine captive-host behavior (bit-exact);
         # overlapped = double-buffered async burst-DMA staging (§5.5's
         # runtime twin) — the host is released at descriptor enqueue
@@ -234,7 +253,8 @@ class Scheduler:
             n_sent, elided = len(plan.sent), plan.bytes_elided
         else:
             n_sent, elided = len(regs), 0
-        xfer = plan_fields(n_sent, dev.model, self.link, self.transport)
+        xfer = plan_fields(n_sent, dev.model, self.link, self.transport,
+                           objective=self.objective)
         cfg_c = self.overlap.exposed_cost(dev.model.concurrent, xfer)
         issue = self.host + cfg_c
         if dev.model.concurrent:
@@ -317,7 +337,7 @@ class Scheduler:
                              bytes_elided=0, context_hit=False)
         issue = self.host
         xfer = plan_fields(len(plan.sent), dev.model, self.link,
-                           self.transport)
+                           self.transport, objective=self.objective)
         cfg_c = xfer.t_set
         # reserve host + wire through the overlap policy: serialized keeps
         # the host captive for the wire (bit-exact pre-engine behavior);
@@ -461,6 +481,8 @@ class Scheduler:
             overlap_mode=self.overlap.mode,
             staging_buffers=self.overlap.buffers,
             transport=self.transport,
+            power=self.power,
+            objective=self.objective,
             metrics=self.metrics,
         )
 

@@ -305,6 +305,9 @@ class ResourceTelemetry:
     busy_cycles: float
     makespan: float
     intervals: tuple = ()  # (start, end, tag) per reservation
+    # the resource's repro.power.EnergyModel when a PowerSpec was attached,
+    # else None — carried so the energy meter works offline from a report
+    energy: object = None
 
     @classmethod
     def from_resource(cls, res, makespan: float) -> "ResourceTelemetry":
@@ -314,6 +317,7 @@ class ResourceTelemetry:
             busy_cycles=res.busy_cycles,
             makespan=makespan,
             intervals=tuple(res.intervals()),
+            energy=getattr(res, "energy", None),
         )
 
     @property
@@ -350,7 +354,9 @@ class LinkTelemetry:
     nbytes: int
     busy_cycles: float
     makespan: float
-    log: tuple = ()  # (start, end, nbytes, tag, mode) per transfer
+    log: tuple = ()  # (start, end, nbytes, tag, mode, energy) per transfer
+    # the wire's idle/wake EnergyModel when a PowerSpec was attached
+    energy: object = None
 
     @classmethod
     def from_port(cls, port, makespan: float) -> "LinkTelemetry":
@@ -361,8 +367,10 @@ class LinkTelemetry:
             nbytes=port.bytes_moved,
             busy_cycles=port.busy_cycles,
             makespan=makespan,
-            log=tuple((t.start, t.end, t.nbytes, t.tag, t.mode)
+            log=tuple((t.start, t.end, t.nbytes, t.tag, t.mode,
+                       getattr(t, "energy", 0.0))
                       for t in port.log),
+            energy=getattr(port.res, "energy", None),
         )
 
     @property
@@ -380,7 +388,12 @@ class LinkTelemetry:
     def timeline(self) -> list[tuple[float, float, str]]:
         """(start, end, tag) busy intervals, transfer order — renderable
         beside device gantts on the same time axis."""
-        return [(start, end, tag) for start, end, _, tag, _ in self.log]
+        return [(entry[0], entry[1], entry[3]) for entry in self.log]
+
+    @property
+    def transfer_joules(self) -> float:
+        """Total wire energy (pJ) of every logged transfer."""
+        return sum(entry[5] for entry in self.log if len(entry) > 5)
 
 
 @dataclass
@@ -399,6 +412,11 @@ class SchedulerReport:
     # under its *actual* configuration before flipping one knob
     staging_buffers: int = 2
     transport: str = "auto"
+    # the run's repro.power.PowerSpec (None = cycle-only run) and the
+    # transport objective, recorded so repro.power.meter can attribute a
+    # report's joules offline and whatif can replay under the same spec
+    power: object = None
+    objective: str = "cycles"
     # the scheduler's label-set registry (repro.obs.metrics): the aggregate
     # properties below are views over it; None only for hand-built reports
     metrics: MetricsRegistry | None = None

@@ -1,0 +1,437 @@
+"""repro.power: joule attribution (the energy conservation invariant,
+property-tested through preemption, shared ports, and both overlap
+modes), the zero-power regression pin, joule-objective transport
+planning, the energy roofline, the what-if joule axis, windowed pool
+power, and the cluster power cap."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import Cluster
+from repro.cluster.powercap import (
+    CapReport,
+    PowerCapTrigger,
+    request_energy_bound,
+    run_power_capped,
+)
+from repro.core.accelerators import REGISTRY
+from repro.core.roofline import energy_roofline_point
+from repro.fabric.link import LINKS
+from repro.fabric.migrate import MigrationPlanner
+from repro.fabric.transport import crossover_fields, plan_fields
+from repro.obs import Tracer, attribute, predict_burst, write_trace
+from repro.obs.diagnose import diagnose
+from repro.obs.monitor import StreamMonitor
+from repro.power import (
+    PowerSpec,
+    ZERO_ENERGY,
+    attribute_energy,
+    max_window_energy,
+    pool_window_energy,
+)
+from repro.power.meter import PoolEnergySnapshot
+from repro.sched import LaunchRequest, Scheduler
+
+# ---------------------------------------------------- conservation property
+
+
+def _stream(seed_reqs):
+    return [LaunchRequest(t, dims, extra, accel=accel, arrival_time=at)
+            for t, dims, extra, accel, at in seed_reqs]
+
+
+@st.composite
+def power_streams(draw):
+    """Mixed-pool request streams (test_obs's generator shape): random
+    arrivals, tile sizes, and write-plan sizes."""
+    reqs, t = [], 0.0
+    for i in range(draw(st.integers(2, 14))):
+        t += float(draw(st.integers(0, 150)))
+        dims = tuple(8 * draw(st.integers(1, 5)) for _ in range(3))
+        nfields = draw(st.integers(0, 32))
+        extra = {f"p{j}": draw(st.integers(0, 3)) * 64 + j
+                 for j in range(nfields)}
+        accel = draw(st.sampled_from(["opengemm", "gemmini"]))
+        reqs.append((f"t{draw(st.integers(0, 2))}", dims, extra, accel, t))
+    return reqs
+
+
+@settings(max_examples=20, deadline=None)
+@given(power_streams(), st.sampled_from(["csr", "noc", "pcie"]),
+       st.sampled_from(["serialized", "overlapped"]))
+def test_energy_conservation_on_every_lane(seed_reqs, link, mode):
+    """The hard invariant (ISSUE 8): per lane, energy components sum to
+    the independently metered lane total within 0.1% — on every link
+    class and overlap mode, under the default power spec."""
+    s = Scheduler.from_registry({"opengemm": 1, "gemmini": 1}, link=link,
+                                overlap=mode, power=PowerSpec.default())
+    rep = s.run_open_loop(_stream(seed_reqs))
+    er = attribute_energy(rep).check()  # raises above 1e-3
+    assert er.max_residual <= 1e-3
+    for lane in er.lanes.values():
+        for comp, val in lane.components.items():
+            assert val >= -1e-9, (lane.name, comp, val)
+
+
+def test_energy_conservation_covers_shared_port():
+    reqs = [LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(16)},
+                          arrival_time=25.0 * i) for i in range(12)]
+    cl = Cluster.uniform(2, {"opengemm": 1}, link="pcie",
+                         overlap="overlapped", shared_port=True,
+                         power=PowerSpec.default())
+    rep = cl.run(list(reqs))
+    er = attribute_energy(rep).check()
+    shared = [n for n in er.lanes if n.endswith(":shared")]
+    assert len(shared) == 1  # the shared wire meters once, pool-wide
+
+
+def test_energy_conservation_survives_preemption():
+    s = Scheduler.from_registry({"opengemm": 1}, link="noc", depth=2,
+                                power=PowerSpec.default())
+    big = {"A": 1, "B": 2, "C": 3, "zp": 0}
+    s.dispatch(LaunchRequest("bulk", (64, 64, 64), dict(big)))  # running
+    s.dispatch(LaunchRequest("bulk", (64, 64, 64), dict(big)))  # staged
+    # ring full (depth=2): the priority arrival preempts the staged launch
+    s.dispatch(LaunchRequest("vip", (8, 8, 8), {"A": 9}, priority=2))
+    rep = s.finish()
+    assert rep.preemptions == 1  # the point of the fixture
+    attribute_energy(rep).check()
+
+
+# ------------------------------------------------------- zero-power pin
+
+
+def _cycle_view(rep):
+    att = attribute(rep)
+    return (rep.makespan, [r.end for r in rep.launch_log()],
+            {n: lane.components for n, lane in att.lanes.items()})
+
+
+def test_zero_power_spec_reproduces_cycle_reports_unchanged():
+    """Attaching energy observability must not perturb a single cycle:
+    a PowerSpec.zero() run is bit-identical to an unpowered one on every
+    cycle-side report, and meters zero occupancy joules."""
+    reqs = [LaunchRequest(f"t{i % 2}", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(12)},
+                          arrival_time=30.0 * i) for i in range(10)]
+
+    def run(power):
+        s = Scheduler.from_registry({"opengemm": 1, "gemmini": 1},
+                                    link="noc", overlap="overlapped",
+                                    power=power)
+        return s.run_open_loop(list(reqs))
+
+    bare, zeroed = run(None), run(PowerSpec.zero())
+    assert _cycle_view(bare) == _cycle_view(zeroed)
+
+    er = attribute_energy(zeroed).check()
+    for name, lane in er.lanes.items():
+        if lane.kind in ("host", "compute"):
+            assert lane.total == 0.0, (name, lane.total)
+        else:  # wire transfer joules are LinkModel properties, not spec's
+            assert lane.components.get("idle", 0.0) == 0.0
+            assert lane.components.get("wake", 0.0) == 0.0
+
+
+# ------------------------------------- transport objective (satellite 2)
+
+
+def test_default_objective_reproduces_cycle_crossover_bit_exactly():
+    """Regression pin: ``objective="cycles"`` is the default, so every
+    pre-energy caller sees PR 3's burst-vs-MMIO decision unchanged."""
+    for model in (REGISTRY["opengemm"], REGISTRY["gemmini"]):
+        for link in (LINKS["noc"], LINKS["pcie"]):
+            assert (crossover_fields(model, link)
+                    == crossover_fields(model, link, objective="cycles"))
+            for n in (0, 1, 2, 4, 8, 16, 64):
+                a = plan_fields(n, model, link)
+                b = plan_fields(n, model, link, objective="cycles")
+                assert (a.mode, a.t_set, a.energy) == (b.mode, b.t_set,
+                                                       b.energy)
+    x = plan_fields(16, REGISTRY["opengemm"], LINKS["noc"])
+    assert (x.mode, x.t_set, x.energy) == ("burst", 61.5, 85.4)
+
+
+def test_joule_crossover_sits_later_than_the_cycle_one():
+    """Burst DMA's descriptor setup costs joules it does not cost cycles
+    (the host builds it locally), so the cheaper-mode decision differs
+    between the two axes — the pinned crossover tables."""
+    pins = {
+        ("opengemm", "noc"): (2, 7, 4),
+        ("gemmini", "noc"): (3, 9, 5),
+        ("opengemm", "pcie"): (1, 2, 1),
+        ("gemmini", "pcie"): (1, 3, 1),
+    }
+    for (mname, lname), expected in pins.items():
+        got = tuple(crossover_fields(REGISTRY[mname], LINKS[lname],
+                                     objective=o)
+                    for o in ("cycles", "joules", "edp"))
+        assert got == expected, (mname, lname, got)
+        cyc, joule, edp = got
+        assert cyc <= edp <= joule  # EDP interpolates the two axes
+
+
+def test_objective_picks_the_cheaper_mode_per_axis():
+    model, link = REGISTRY["opengemm"], LINKS["noc"]
+    for n in range(1, 32):
+        by_cycles = plan_fields(n, model, link, objective="cycles")
+        by_joules = plan_fields(n, model, link, objective="joules")
+        forced = [plan_fields(n, model, link, mode=m)
+                  for m in ("mmio", "burst")]
+        assert by_cycles.t_set == min(f.t_set for f in forced)
+        assert by_joules.energy == min(f.energy for f in forced)
+    with pytest.raises(AssertionError):
+        plan_fields(4, model, link, objective="watts")
+
+
+# ------------------------------------------------------- energy roofline
+
+
+def test_energy_roofline_point_ridge_and_attainable():
+    pt = energy_roofline_point("demo", total_ops=8192.0, config_bytes=256.0,
+                               config_energy=512.0, total_energy=4096.0,
+                               compute_power=0.5, p_peak=2.0)
+    assert pt.peak_ops_per_joule == 4.0
+    assert pt.bw_energy == 0.5  # 256 bytes / 512 pJ
+    assert pt.ridge == 8.0  # peak / bw_e, in ops per config byte
+    assert pt.i_oc == 32.0
+    assert pt.energy_bound == "compute"
+    assert pt.efficiency == 2.0
+    # harmonic ceiling: 1/(1/4 + 1/(0.5*32))
+    assert pt.attainable == pytest.approx(1.0 / (0.25 + 1.0 / 16.0))
+    assert pt.utilization == 0.5
+
+
+# -------------------------------------------------- what-if joule axis
+
+
+def _joule_stream():
+    """gemmini-only on noc under forced MMIO: 5-field extras keep the
+    per-launch write plan at 8 fields — inside the window where burst
+    DMA wins cycles but *loses* joules (descriptor setup energy)."""
+    return [LaunchRequest("t0", (16, 16, 16),
+                          {f"f{j}": 96 * i + j for j in range(5)},
+                          accel="gemmini", arrival_time=40.0 * i)
+            for i in range(10)]
+
+
+def _joule_run():
+    s = Scheduler.from_registry({"gemmini": 1}, link="noc",
+                                overlap="serialized", transport="mmio",
+                                power=PowerSpec.default())
+    return s.run_open_loop(_joule_stream())
+
+
+def test_whatif_prices_the_burst_counterfactual_in_joules():
+    w = predict_burst(_joule_run())
+    assert w is not None
+    assert w.predicted_savings == pytest.approx(36.0)
+    assert w.predicted_joule_savings == pytest.approx(-6.0)
+    assert w.axes_disagree  # a cycle win that costs joules
+    d = w.to_dict()
+    assert d["axes_disagree"] is True
+    assert d["predicted_joule_savings"] == pytest.approx(-6.0)
+
+
+def test_doctor_flags_cycle_joule_axis_disagreement():
+    d = diagnose(_joule_run())
+    recs = [r for r in d.recommendations if r.axes_disagree]
+    assert recs, "the burst recommendation must carry the disagreement flag"
+    assert recs[0].predicted_joule_savings == pytest.approx(-6.0)
+    assert any("costs joules" in n for n in d.notes)
+    assert "[!] axes disagree" in d.render()
+
+
+# ----------------------------------------- windowed power and snapshot
+
+
+def _powered_cluster(n=12):
+    reqs = [LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(10)},
+                          accel="opengemm" if i % 2 else "gemmini",
+                          arrival_time=20.0 * i) for i in range(n)]
+    cl = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                         power=PowerSpec.default())
+    rep = cl.run(list(reqs))
+    return cl, rep
+
+
+def test_snapshot_window_energy_matches_the_reference_meter():
+    import random
+
+    cl, _ = _powered_cluster()
+    snap = PoolEnergySnapshot(cl.hosts)
+    mk = max(h.clock for h in cl.hosts)
+    rng = random.Random(7)
+    for _ in range(100):
+        t0 = rng.uniform(-200.0, mk)
+        t1 = t0 + rng.uniform(0.0, 800.0)
+        ref = pool_window_energy(cl.hosts, t0, t1)
+        assert snap.window_energy(t0, t1) == pytest.approx(ref, rel=1e-9)
+
+
+def test_snapshot_extend_equals_fresh_build():
+    """The power cap's incremental path: extending a snapshot across
+    dispatches lands on the same tracks as rebuilding from the logs."""
+    reqs = [LaunchRequest(f"t{i % 3}", (16, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(10)},
+                          accel="opengemm" if i % 2 else "gemmini",
+                          arrival_time=20.0 * i) for i in range(12)]
+    cl = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                         power=PowerSpec.default())
+    snap = PoolEnergySnapshot(cl.hosts)
+    for req in reqs:
+        cl.router.route(req, now=req.arrival_time).dispatch(req)
+        snap.extend()
+    fresh = PoolEnergySnapshot(cl.hosts)
+    mk = max(h.clock for h in cl.hosts)
+    for k in range(40):
+        t0 = -100.0 + k * (mk + 200.0) / 40.0
+        assert (snap.window_energy(t0, t0 + 512.0)
+                == pytest.approx(fresh.window_energy(t0, t0 + 512.0)))
+    assert snap.max_window(512.0) == pytest.approx(fresh.max_window(512.0))
+
+
+def test_max_window_energy_finds_the_brute_force_worst():
+    cl, _ = _powered_cluster()
+    window = 512.0
+    worst, at = max_window_energy(cl.hosts, window)
+    mk = max(h.clock for h in cl.hosts)
+    # dense scan can only find windows at most as hot as the edge scan
+    step = mk / 400.0
+    dense = max(pool_window_energy(cl.hosts, i * step, i * step + window)
+                for i in range(400))
+    assert worst >= dense - 1e-9
+    assert worst == pytest.approx(
+        pool_window_energy(cl.hosts, at, at + window))
+
+
+def test_next_breakpoint_always_advances_past_float_rounding():
+    """Regression: an edge barely above admit − window can round back to
+    exactly admit when the window is re-added — the admission loop must
+    still advance or it spins forever."""
+    cl, _ = _powered_cluster(n=2)
+    snap = PoolEnergySnapshot(cl.hosts)
+    snap.edges = [952.1]
+    admit, window = 3000.1, 2048.0
+    assert 952.1 + window == admit  # the trap, preserved by the pin
+    assert 952.1 > admit - window
+    nxt = snap.next_breakpoint(admit, window)
+    assert nxt is None or nxt > admit
+
+
+def test_monitor_power_draw_windows_the_canonical_signal():
+    mon = StreamMonitor(window=100.0)
+    mon.observe("power.energy", 50.0, 300.0, host="h0")
+    mon.observe("power.energy", 90.0, 200.0, host="h1")
+    assert mon.power_draw(100.0) == pytest.approx(5.0)  # 500 pJ / 100 cyc
+    assert mon.power_draw(100.0, host="h0") == pytest.approx(3.0)
+
+
+# ------------------------------------------------------- the power cap
+
+
+def _cap_requests(n=40):
+    return [LaunchRequest(f"t{i % 4}", (8, 16, 16),
+                          {f"p{j}": i * 64 + j for j in range(8)},
+                          accel="opengemm" if i % 2 else "gemmini",
+                          arrival_time=12.0 * i) for i in range(n)]
+
+
+def test_power_cap_holds_the_budget_in_every_window():
+    window = 1024.0
+    probe = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                            power=PowerSpec.default())
+    probe.run(_cap_requests())
+    peak, _ = max_window_energy(probe.hosts, window)
+    budget = 0.6 * peak / window
+
+    cl = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                         power=PowerSpec.default())
+    rep, cap = run_power_capped(cl, _cap_requests(),
+                                budget_power=budget, window=window)
+    assert isinstance(cap, CapReport)
+    assert cap.held
+    assert cap.max_window_power <= budget + 1e-9
+    assert cap.delayed > 0 and cap.total_delay > 0.0  # binding budget
+    assert cap.p50_delay >= 0.0
+    # delay is queueing latency: arrivals unchanged, so queue delay grew
+    assert rep.launches == len(_cap_requests())
+    d = cap.to_dict()
+    assert d["held"] and d["delayed"] == cap.delayed
+
+
+def test_power_cap_uncapped_budget_never_delays():
+    window = 1024.0
+    cl = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                         power=PowerSpec.default())
+    rep, cap = run_power_capped(cl, _cap_requests(),
+                                budget_power=1e9, window=window)
+    assert cap.delayed == 0 and cap.total_delay == 0.0
+    assert cap.held
+
+
+def test_power_cap_rejects_infeasible_budgets():
+    cl = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                         power=PowerSpec.default())
+    bound = request_energy_bound(cl.hosts[0], _cap_requests(1)[0])
+    assert bound > 0.0
+    with pytest.raises(AssertionError, match="infeasible cap"):
+        run_power_capped(cl, _cap_requests(),
+                         budget_power=1e-6, window=1024.0)
+
+
+def test_power_cap_trigger_feeds_monitor_and_sheds_when_hot():
+    window = 1024.0
+    probe = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                            power=PowerSpec.default())
+    probe.run(_cap_requests(60))
+    peak, _ = max_window_energy(probe.hosts, window)
+    budget = 0.6 * peak / window
+
+    mon = StreamMonitor(window=window)
+    cl = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                         power=PowerSpec.default())
+    trigger = PowerCapTrigger(MigrationPlanner(link="noc", policy="warm"),
+                              budget_power=budget, window=window,
+                              monitor=mon)
+    _, cap = run_power_capped(cl, _cap_requests(60), budget_power=budget,
+                              window=window, trigger=trigger)
+    assert cap.held
+    now = max(h.clock for h in cl.hosts)
+    assert mon.power_draw(now) >= 0.0  # the canonical signal was fed
+    assert mon.windowed_sum("power.energy", now, host=cl.hosts[0].id) >= 0.0
+
+
+def test_zero_power_pool_rejects_the_cap_cleanly():
+    """Without a power spec every window meters ~zero joules on csr-free
+    links — the cap must still run (budget trivially held)."""
+    cl = Cluster.uniform(2, {"opengemm": 1, "gemmini": 1}, link="noc",
+                         power=PowerSpec.zero())
+    _, cap = run_power_capped(cl, _cap_requests(10), budget_power=100.0,
+                              window=1024.0)
+    assert cap.held
+
+
+# ---------------------------------------------------- trace energy block
+
+
+def test_trace_embeds_conservation_checked_energy(tmp_path):
+    from repro.obs.export import trace_power
+
+    tracer = Tracer()
+    s = Scheduler.from_registry({"opengemm": 1, "gemmini": 1}, link="noc",
+                                overlap="overlapped", tracer=tracer,
+                                power=PowerSpec.default())
+    rep = s.run_open_loop(_joule_stream())
+    er = attribute_energy(rep).check()
+    trace_power(tracer, rep)
+    path = tmp_path / "trace.json"
+    doc = write_trace(tracer, str(path), attribution=attribute(rep).check(),
+                      metrics=rep.metrics, energy=er)
+    assert doc["energy"]["max_residual"] <= 1e-3
+    assert doc["energy"]["total_energy"] > 0.0
+    counters = [e for e in doc["traceEvents"] if e.get("ph") == "C"]
+    assert counters and all(e["name"].startswith("power[")
+                            for e in counters)
