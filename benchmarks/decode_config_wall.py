@@ -6,16 +6,28 @@ becomes (the paper's thesis). Fusing k decode steps into one launch
 (``lax.scan`` inside jit) amortizes one configuration over k macro-ops:
 I_OC rises ×k and throughput climbs toward the compute roofline, mirroring
 Figure 4's rightward escape from the configuration-bound region.
+
+The second sweep attacks the *other* boundary crossing of the k=1 loop:
+where the sampled token comes from. Host-side sampling launches one decode,
+pulls the full ``(B, vocab)`` logits device→host, and argmaxes on the host —
+every step pays a full sync of data that is immediately reduced to B ids.
+Fused sampling (``Model.decode_and_sample``, the ``kernels/sampling.py``
+epilogue) argmaxes on-device and loops the ids straight back into the next
+launch; the host never touches logits. Same launch count, same tokens —
+only the per-step sync payload shrinks, which is the serving engine's
+default mode (``sampling="fused"``).
 """
 
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get
 from repro.models.model import Model
@@ -68,6 +80,62 @@ def run(arch: str = "qwen2-0.5b", batch: int = 4, cache_len: int = 128,
     return rows
 
 
+def run_sampling_ab(arch: str = "qwen2-0.5b", batch: int = 4,
+                    cache_len: int = 128, total_tokens: int = 64,
+                    sample_backend: str = "xla") -> list[dict]:
+    """Host-side argmax vs the fused on-device sampling epilogue, one
+    launch per token in both arms — the A/B isolates the sampling sync."""
+    cfg = dataclasses.replace(get(arch).reduced(), remat="none")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    host_step = jax.jit(model.decode_step, donate_argnums=(1,))
+    fused_step = jax.jit(
+        functools.partial(model.decode_and_sample,
+                          sample_backend=sample_backend),
+        donate_argnums=(1,))
+    no_override = (jnp.zeros((batch,), jnp.int32),
+                   jnp.zeros((batch,), bool))
+
+    def run_host():
+        cache = model.init_cache(batch, cache_len)
+        tok = np.ones((batch, 1), np.int32)
+        for pos in range(total_tokens):
+            logits, cache = host_step(
+                params, cache, jnp.asarray(tok), jnp.int32(pos))
+            # the sync: full logits cross the boundary to be argmaxed here
+            tok = np.asarray(logits[:, 0], np.float32).argmax(-1) \
+                    .astype(np.int32)[:, None]
+        return tok
+
+    def run_fused():
+        cache = model.init_cache(batch, cache_len)
+        ids = jnp.ones((batch, 1), jnp.int32)
+        for pos in range(total_tokens):
+            # device-resident loopback: only (B,) ids would ever need sync
+            ids, cache = fused_step(params, cache, ids, *no_override,
+                                    jnp.int32(pos))
+        return np.asarray(jax.block_until_ready(ids))
+
+    rows = []
+    vocab_bytes = batch * cfg.vocab_size * 2  # bf16 logits
+    for mode, fn, sync in (("host", run_host, vocab_bytes),
+                           ("fused", run_fused, batch * 4)):
+        fn()  # warmup + compile
+        t0 = time.perf_counter()
+        last = fn()
+        dt = time.perf_counter() - t0
+        rows.append({
+            "sampling": mode,
+            "total_s": dt,
+            "tok_per_s": total_tokens * batch / dt,
+            "sync_bytes_per_step": sync,
+            "last_token": [int(t) for t in np.asarray(last).ravel()],
+        })
+    assert rows[0]["last_token"] == rows[1]["last_token"], \
+        "host and fused sampling diverged — the streams must be bit-identical"
+    return rows
+
+
 def export_trace(path: str) -> None:
     """Instrumented simulator analogue of the wall-clock sweep: a
     single-token decode stream is one tiny macro-op behind a full
@@ -95,12 +163,20 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None,
                     help="export an instrumented simulator analogue of "
                          "the single-token (k=1) decode stream")
+    ap.add_argument("--sample-backend", default="xla",
+                    choices=("xla", "pallas", "pallas_interpret"),
+                    help="backend for the fused sampling epilogue")
     args = ap.parse_args()
     print("# decode config wall: tokens-per-launch sweep (reduced qwen2-0.5b)")
     print("tokens_per_launch,total_s,tok_per_s,us_per_token")
     for r in run():
         print(f"{r['tokens_per_launch']},{r['total_s']:.4f},"
               f"{r['tok_per_s']:.1f},{r['us_per_token']:.1f}")
+    print("# sampling sync A/B: host argmax vs fused epilogue (k=1 launches)")
+    print("sampling,total_s,tok_per_s,sync_bytes_per_step")
+    for r in run_sampling_ab(sample_backend=args.sample_backend):
+        print(f"{r['sampling']},{r['total_s']:.4f},{r['tok_per_s']:.1f},"
+              f"{r['sync_bytes_per_step']}")
     if args.trace_out:
         export_trace(args.trace_out)
 

@@ -39,6 +39,9 @@ import sys
 
 MAX_RESIDUAL = 1e-3  # worst lane residual / makespan the gate tolerates
 
+# every closed-loop step span must carry these (driver-emitted) tags
+STEP_SPAN_ARGS = ("tenant", "tokens", "launches", "prefill_launches")
+
 EVENT_REQUIRED = {
     "X": ("name", "cat", "ph", "ts", "dur", "pid", "tid"),
     "i": ("name", "ph", "ts", "pid", "tid"),
@@ -67,6 +70,15 @@ def check_trace(path: str) -> list[str]:
             problems.append(f"{path}: event {i} ({ph}) missing {missing}")
         if ph == "X" and ev.get("dur", 0) < 0:
             problems.append(f"{path}: event {i} has negative dur")
+        if ph == "X" and ev.get("cat") == "step":
+            # closed-loop step spans must stay attributable: token count,
+            # launch fan-out, and the prefill/decode split are what the
+            # serving dashboards (TTFT, launches-per-token) are built from
+            missing = [k for k in STEP_SPAN_ARGS
+                       if k not in ev.get("args", {})]
+            if missing:
+                problems.append(
+                    f"{path}: step span {i} missing args {missing}")
     lanes = {(ev["pid"], ev["tid"]) for ev in events if ev.get("ph") == "X"}
     if not lanes:
         problems.append(f"{path}: no span lanes")

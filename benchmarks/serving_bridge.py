@@ -3,9 +3,11 @@
 N `serving.ServingEngine` tenants (one small model-zoo architecture,
 shared compiled decode step) run **closed-loop** against a multi-host
 cluster over a NoC config fabric: every continuous-batching step's
-``{tokens, positions, live-mask}`` descriptor is the config payload of a
-cluster launch, and a tenant only emits its next step after the previous
-one retires — queueing delay throttles token throughput directly.
+descriptor — ``{positions}`` plus elided residents under fused sampling;
+``{tokens, positions, live-mask}`` under host sampling — is the config
+payload of a cluster launch, and a tenant only emits its next step after
+the previous one retires — queueing delay throttles token throughput
+directly.
 
 Two routers A/B, more tenants than any device's ``max_contexts`` so the
 context-churn regime is real:
@@ -28,6 +30,12 @@ Acceptance (asserted below, ISSUE 4):
   implementations, one stream);
 * token output is identical under both routers (the bridge never
   perturbs model output).
+
+Two further A/B cells (ISSUE 9): **fused vs host sampling** — the fused
+decode launch drops the ``tokens`` leaf (device-resident token loopback)
+and must produce bit-identical token streams while raising
+tokens/kcycle — and **batched vs token-at-a-time prefill** — chunked
+prefill must shorten closed-loop time-to-first-token.
 
 Usage: ``PYTHONPATH=src python benchmarks/serving_bridge.py [--smoke] [--out F]``
 """
@@ -56,17 +64,24 @@ def build_model():
     cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), remat="none")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    return model, params, ServingEngine.compile_decode(model)
+    fns = {
+        "fused": ServingEngine.compile_decode(model, sampling="fused"),
+        "host": ServingEngine.compile_decode(model, sampling="host"),
+        "prefill": ServingEngine.compile_prefill(model),
+    }
+    return model, params, fns
 
 
-def make_tenants(model, params, decode_fn, n_tenants: int,
-                 max_new: int) -> list[TenantEngine]:
+def make_tenants(model, params, fns, n_tenants: int, max_new: int,
+                 sampling: str = "fused",
+                 prefill_chunk: int = 8) -> list[TenantEngine]:
     """Deterministic per-tenant request mixes (distinct prompts ⇒ distinct
     token streams ⇒ distinct descriptor deltas)."""
     tenants = []
     for i in range(n_tenants):
         eng = ServingEngine(model, params, max_slots=MAX_SLOTS, max_len=64,
-                            decode_fn=decode_fn)
+                            decode_fn=fns[sampling], prefill_fn=fns["prefill"],
+                            sampling=sampling, prefill_chunk=prefill_chunk)
         prompts = [[3 + i, 5, 2 + (i % 3)], [7, 1 + i], [11, 2, 4, 1 + i]]
         for uid, prompt in enumerate(prompts):
             eng.submit(Request(uid=uid, prompt=prompt, max_new_tokens=max_new))
@@ -75,9 +90,11 @@ def make_tenants(model, params, decode_fn, n_tenants: int,
     return tenants
 
 
-def run_cell(model, params, decode_fn, *, n_hosts: int, n_tenants: int,
-             max_new: int, policy: str, sticky: bool) -> dict:
-    tenants = make_tenants(model, params, decode_fn, n_tenants, max_new)
+def run_cell(model, params, fns, *, n_hosts: int, n_tenants: int,
+             max_new: int, policy: str, sticky: bool,
+             sampling: str = "fused", prefill_chunk: int = 8) -> dict:
+    tenants = make_tenants(model, params, fns, n_tenants, max_new,
+                           sampling=sampling, prefill_chunk=prefill_chunk)
     cluster = Cluster.uniform(n_hosts, {"opengemm": 1}, policy=policy,
                               sticky=sticky, link="noc",
                               max_contexts=MAX_CONTEXTS)
@@ -89,11 +106,15 @@ def run_cell(model, params, decode_fn, *, n_hosts: int, n_tenants: int,
                                         key=lambda r: r.uid)]
         for t, te in ((te.tenant, te) for te in tenants)
     }
+    ttfts = list(rep.ttft_cycles().values())
     return {
         "policy": policy,
         "sticky": sticky,
         "hosts": n_hosts,
         "tenants": n_tenants,
+        "sampling": sampling,
+        "prefill_chunk": prefill_chunk,
+        "ttft": sum(ttfts) / len(ttfts) if ttfts else 0.0,
         "tokens": rep.tokens,
         "steps": len(rep.steps),
         "launches": rep.cluster.launches,
@@ -117,27 +138,49 @@ def run_cell(model, params, decode_fn, *, n_hosts: int, n_tenants: int,
 
 
 def run(smoke: bool = False) -> dict:
-    model, params, decode_fn = build_model()
+    model, params, fns = build_model()
     max_new = 6 if smoke else 10
     cells_spec = ([(2, 6), (2, 8)] if smoke
                   else [(2, 6), (2, 8), (4, 8)])
     cells = []
+    fused_ref = fused_tokens = None
     for n_hosts, n_tenants in cells_spec:
         row = {"hosts": n_hosts, "tenants": n_tenants, "max_new": max_new}
-        row["affinity"] = run_cell(model, params, decode_fn,
+        row["affinity"] = run_cell(model, params, fns,
                                    n_hosts=n_hosts, n_tenants=n_tenants,
                                    max_new=max_new, policy="affinity",
                                    sticky=True)
-        row["round_robin"] = run_cell(model, params, decode_fn,
+        row["round_robin"] = run_cell(model, params, fns,
                                       n_hosts=n_hosts, n_tenants=n_tenants,
                                       max_new=max_new, policy="round_robin",
                                       sticky=False)
         # the bridge may never perturb model output: both routers saw the
         # same engines, so the generated tokens must be identical
-        assert (row["affinity"].pop("_tokens_by_tenant")
-                == row["round_robin"].pop("_tokens_by_tenant")), (
+        toks_aff = row["affinity"].pop("_tokens_by_tenant")
+        toks_rr = row["round_robin"].pop("_tokens_by_tenant")
+        assert toks_aff == toks_rr, (
             "router choice changed generated tokens — bridge perturbed output")
+        if (n_hosts, n_tenants) == (2, 6):
+            # the first cell's sticky arm doubles as the fused+batched arm
+            # of both A/B comparisons below
+            fused_ref, fused_tokens = row["affinity"], toks_aff
         cells.append(row)
+
+    # -- A/B 1: fused vs host-side sampling (same cell shape, sticky) ------
+    host_cell = run_cell(model, params, fns, n_hosts=2, n_tenants=6,
+                         max_new=max_new, policy="affinity", sticky=True,
+                         sampling="host")
+    assert host_cell.pop("_tokens_by_tenant") == fused_tokens, (
+        "fused sampling changed generated tokens vs host-side argmax — "
+        "the tie-break/loopback parity contract is broken")
+
+    # -- A/B 2: batched vs token-at-a-time prefill (fused both arms) -------
+    tat_cell = run_cell(model, params, fns, n_hosts=2, n_tenants=6,
+                        max_new=max_new, policy="affinity", sticky=True,
+                        prefill_chunk=1)
+    assert tat_cell.pop("_tokens_by_tenant") == fused_tokens, (
+        "prefill chunking changed generated tokens")
+
     return {
         "benchmark": "serving_bridge",
         "arch": "qwen2-0.5b (reduced)",
@@ -147,6 +190,8 @@ def run(smoke: bool = False) -> dict:
         "max_contexts": MAX_CONTEXTS,
         "smoke": smoke,
         "cells": cells,
+        "sampling_ab": {"fused": fused_ref, "host": host_cell},
+        "prefill_ab": {"batched": fused_ref, "token_at_a_time": tat_cell},
         # cross-cell summary (CI requires every BENCH_*.json to carry one)
         "geomean": {
             "rr_over_affinity_p99_decode": geomean(
@@ -158,6 +203,11 @@ def run(smoke: bool = False) -> dict:
                  for c in cells]),
             "affinity_elision_ratio": geomean(
                 [c["affinity"]["elision_ratio"] for c in cells]),
+            "fused_over_host_tokens_per_kcycle": (
+                fused_ref["tokens_per_kcycle"]
+                / max(host_cell["tokens_per_kcycle"], 1e-9)),
+            "batched_over_tat_ttft": (
+                tat_cell["ttft"] / max(fused_ref["ttft"], 1e-9)),
         },
     }
 
@@ -173,8 +223,8 @@ def export_trace(path: str, smoke: bool) -> None:
     with a tracer attached: the exported trace carries host/wire/compute
     lanes plus per-tenant step and token lanes, with the conservation-
     checked cycle attribution and the unified metrics registry embedded."""
-    model, params, decode_fn = build_model()
-    tenants = make_tenants(model, params, decode_fn, n_tenants=6,
+    model, params, fns = build_model()
+    tenants = make_tenants(model, params, fns, n_tenants=6,
                            max_new=6 if smoke else 10)
 
     def scenario(tracer):
@@ -208,9 +258,23 @@ def main() -> None:
                   f"{c['tokens']},{c['tokens_per_kcycle']:.2f},"
                   f"{c['p99_decode']:.0f},{c['config_bytes_sent']},"
                   f"{c['elision_ratio']:.3f},{c['parity_matched']}")
+    ab = result["sampling_ab"]
+    print("\n# sampling A/B (2 hosts, 6 tenants, sticky affinity)")
+    for mode in ("fused", "host"):
+        c = ab[mode]
+        print(f"{mode},tok_per_kcycle={c['tokens_per_kcycle']:.2f},"
+              f"bytes_sent={c['config_bytes_sent']},ttft={c['ttft']:.0f}")
+    pf = result["prefill_ab"]
+    print("# prefill A/B (fused; chunk=8 vs chunk=1)")
+    for mode in ("batched", "token_at_a_time"):
+        c = pf[mode]
+        print(f"{mode},chunk={c['prefill_chunk']},ttft={c['ttft']:.0f},"
+              f"launches={c['launches']}")
     g = result["geomean"]
     print(f"\ngeomean rr/affinity p99 decode  {g['rr_over_affinity_p99_decode']:.2f}x")
     print(f"geomean affinity/rr tokens/kcyc {g['affinity_over_rr_tokens_per_kcycle']:.2f}x")
+    print(f"fused/host tokens per kcycle    {g['fused_over_host_tokens_per_kcycle']:.2f}x")
+    print(f"tat/batched prefill ttft        {g['batched_over_tat_ttft']:.2f}x")
 
     out = Path(args.out)
     out.write_text(json.dumps(result, indent=2, sort_keys=True))
@@ -232,6 +296,19 @@ def main() -> None:
             f"engine.config_traffic() accounting under sticky routing "
             f"(cell hosts={cell['hosts']} tenants={cell['tenants']})")
     assert g["rr_over_affinity_p99_decode"] > 1.0
+    # acceptance (ISSUE 9): fused sampling must improve tokens/kcycle and
+    # batched prefill must reduce closed-loop TTFT vs token-at-a-time —
+    # both arms parity-matched (asserted inside run())
+    assert result["sampling_ab"]["host"]["parity_matched"], (
+        "host-sampling arm lost byte-accounting parity")
+    assert result["prefill_ab"]["token_at_a_time"]["parity_matched"], (
+        "token-at-a-time arm lost byte-accounting parity")
+    assert g["fused_over_host_tokens_per_kcycle"] > 1.0, (
+        f"acceptance: fused sampling must beat host-side sampling on "
+        f"tokens/kcycle, got {g['fused_over_host_tokens_per_kcycle']:.3f}x")
+    assert g["batched_over_tat_ttft"] > 1.0, (
+        f"acceptance: batched prefill must reduce TTFT vs token-at-a-time, "
+        f"got {g['batched_over_tat_ttft']:.3f}x")
 
 
 if __name__ == "__main__":

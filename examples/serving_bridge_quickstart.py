@@ -2,11 +2,17 @@
 
 Three tiny `ServingEngine` tenants (one shared compiled decode step) run
 *closed-loop* against a 2-host cluster over a NoC config fabric: every
-continuous-batching step's ``{tokens, positions, live-mask}`` descriptor
-becomes a cluster launch, and each tenant's next step is released only
-when its previous one retires — queueing delay throttles token
-throughput, instead of just fattening a percentile as in the open-loop
-``cluster_quickstart``.
+continuous-batching step's descriptor becomes a cluster launch, and each
+tenant's next step is released only when its previous one retires —
+queueing delay throttles token throughput, instead of just fattening a
+percentile as in the open-loop ``cluster_quickstart``.
+
+The engines run in their default **fused-sampling** mode: the decode
+launch samples on-device and keeps the ids device-resident, so the
+steady-state descriptor is ``{positions}`` plus elided residents (no
+``tokens`` leaf), and the per-step sync the driver prices on the feedback
+edge is a few id bytes instead of the full logits. Admission goes through
+masked **chunked prefill** launches (``prefill_chunk`` tokens per launch).
 
 Run: ``PYTHONPATH=src python examples/serving_bridge_quickstart.py``
 """
@@ -24,12 +30,14 @@ from repro.serving import Request, ServingEngine
 cfg = dataclasses.replace(get("qwen2-0.5b").reduced(), remat="none")
 model = Model(cfg)
 params = model.init(jax.random.key(0))
-decode = ServingEngine.compile_decode(model)  # one JIT, shared by all tenants
+# one JIT each for decode (fused sampling) and prefill, shared by all tenants
+decode = ServingEngine.compile_decode(model)
+prefill = ServingEngine.compile_prefill(model)
 
 tenants = []
 for i in range(3):
     engine = ServingEngine(model, params, max_slots=4, max_len=64,
-                           decode_fn=decode)
+                           decode_fn=decode, prefill_fn=prefill)
     for uid, prompt in enumerate([[3 + i, 5, 2], [7, 1 + i]]):
         engine.submit(Request(uid=uid, prompt=prompt, max_new_tokens=6))
     tenants.append(TenantEngine(f"t{i}", engine, accel="opengemm",
@@ -55,7 +63,12 @@ for name, s in sorted(report.serving.items()):
 print("\nper-step descriptor bytes for t0 (sent / elided):")
 for arrival, sent, elided in report.step_timeline("t0")[:5]:
     print(f"  cycle {arrival:>6.0f}: {sent:>4} sent, {elided:>4} elided")
-print("  (cold full send on step 1, then only the tokens/positions delta)")
+print("  (cold full send on step 1, then only the positions delta — fused"
+      "\n   sampling keeps token ids on-device, so no tokens leaf at all)")
+
+print("\ntime-to-first-token (admission prefill chain + first decode):")
+for name, ttft in sorted(report.ttft_cycles().items()):
+    print(f"  {name}: {ttft:.0f} cycles")
 
 print("\nengine↔cluster config-byte accounting parity:")
 for name, p in report.config_parity().items():

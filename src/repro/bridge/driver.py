@@ -31,7 +31,16 @@ next step is released sooner — hidden T_set lands directly on
 ``tokens_per_kcycle``, which no open-loop replay can show. Each
 :class:`StepRecord` carries the step's exposed-vs-hidden config cycles so
 the bridge report can say how much of the win was overlap.
-"""
+
+The feedback edge also prices the **device→host sync** the engine blocks
+on before it can schedule its next step (``TenantEngine.sync_bytes``):
+under host-side sampling that is the full ``(B, vocab)`` logits tensor
+crossing the boundary every decode step just to be argmaxed; under the
+fused sampling kernel it is ``B`` int32 token ids. The readback crosses
+the home host's link (burst DMA when the link supports it, an ordered
+write otherwise; a core-local ``csr`` link prices it to ~0), so the
+fused-sampling win lands where the paper says it must — on the closed
+loop's tokens/kcycle, not just on descriptor byte counts."""
 
 from __future__ import annotations
 
@@ -55,10 +64,12 @@ class StepRecord:
     completion: float  # cycle its last launch retired
     tokens: int  # tokens the step produced
     launches: int  # launches the step issued (prefill chains > 1)
-    bytes_sent: int  # config bytes that crossed the boundary
-    bytes_elided: int  # config bytes resident state kept off the wire
+    prefill_launches: int = 0  # ... of which were chunked-prefill launches
+    bytes_sent: int = 0  # config bytes that crossed the boundary
+    bytes_elided: int = 0  # config bytes resident state kept off the wire
     config_cycles: float = 0.0  # T_set of the step's descriptors
     exposed_config: float = 0.0  # ... the part the engine failed to hide
+    readback_cycles: float = 0.0  # device→host sampling sync on the link
 
     @property
     def latency(self) -> float:
@@ -115,9 +126,21 @@ class ClosedLoopDriver:
             host.adopt_context(te.tenant)
         for rec in reversed(dev.telemetry.launch_log):
             if rec.tenant == req.tenant and rec.arrival == req.arrival_time:
-                return rec
+                return rec, host
         raise AssertionError(
             f"dispatched launch for {req.tenant!r} left no record on {dev.id}")
+
+    @staticmethod
+    def _readback_cycles(te: TenantEngine, link) -> float:
+        """Cycles the step's device→host sampling sync occupies on the
+        serving host's link — the payload the engine *blocks on* before it
+        can schedule the next step, so it lands on the feedback edge."""
+        nbytes = te.sync_bytes
+        if not nbytes or link is None:
+            return 0.0
+        if link.supports_dma:
+            return link.burst_cycles(nbytes)
+        return link.write_cycles(nbytes)
 
     def run(self, max_steps: int = 100_000) -> BridgeReport:
         """Drain every tenant engine; returns the bridged report."""
@@ -141,13 +164,19 @@ class ClosedLoopDriver:
             t = now
             sent = elided = 0
             cfg = exposed = 0.0
+            host = None
             for desc in descs:
-                rec = self._dispatch(te, desc, t)
+                rec, host = self._dispatch(te, desc, t)
                 t = rec.end
                 sent += rec.bytes_sent
                 elided += rec.bytes_elided
                 cfg += rec.config_cycles
                 exposed += rec.exposed_config
+            # feedback edge: the host blocks on the step's sampling sync
+            # before it can release this tenant's next step
+            rb = self._readback_cycles(te, host.link if host else None)
+            t += rb
+            prefills = sum(1 for d in descs if "prefill_tokens" in d)
             self.steps.append(StepRecord(
                 tenant=name,
                 step=te.steps,
@@ -155,10 +184,12 @@ class ClosedLoopDriver:
                 completion=t,
                 tokens=produced,
                 launches=len(descs),
+                prefill_launches=prefills,
                 bytes_sent=sent,
                 bytes_elided=elided,
                 config_cycles=cfg,
                 exposed_config=exposed,
+                readback_cycles=rb,
             ))
             if self.monitor is not None:
                 feed_step(self.monitor, tenant=name, completion=t,
@@ -169,7 +200,9 @@ class ClosedLoopDriver:
                 self.tracer.span("step", "step", now, t,
                                  lane=f"step[{name}]", tenant=name,
                                  step=te.steps, tokens=produced,
-                                 launches=len(descs), bytes_sent=sent)
+                                 launches=len(descs),
+                                 prefill_launches=prefills,
+                                 bytes_sent=sent)
                 self.tracer.counter("tokens", t, float(te.tokens),
                                     lane=f"tokens[{name}]", tenant=name)
             heapq.heappush(ready, (t, name))

@@ -71,6 +71,20 @@ class BridgeReport:
     def decode_latencies(self, tenant: str) -> list[float]:
         return [s.latency for s in self.steps if s.tenant == tenant]
 
+    def ttft_cycles(self) -> dict[str, float]:
+        """Mean admission-step latency per tenant — the closed-loop
+        time-to-first-token proxy: an admission step's latency spans its
+        prefill chain plus the first decode launch, so this is exactly the
+        quantity chunked prefill shortens vs. token-at-a-time (prompts of
+        one token admit with no prefill launch and are excluded)."""
+        out: dict[str, float] = {}
+        for tenant in sorted({s.tenant for s in self.steps}):
+            lats = [s.latency for s in self.steps
+                    if s.tenant == tenant and s.prefill_launches > 0]
+            if lats:
+                out[tenant] = sum(lats) / len(lats)
+        return out
+
     # -- descriptor traffic --------------------------------------------------
 
     def step_timeline(self, tenant: str) -> list[tuple[float, int, int]]:

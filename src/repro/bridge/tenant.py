@@ -66,6 +66,12 @@ class TenantEngine:
         self.tokens = 0
         self.steps = 0
         self.launches = 0
+        # per-dim-field send count for the accounting identity: a dim
+        # register crosses the boundary whenever its value differs from the
+        # previous launch's (prefill launches scale M by the chunk length,
+        # so entering/leaving prefill re-sends M while K/N stay resident)
+        self._dim_sends = [0] * len(self.dims)
+        self._last_dims: tuple[int, ...] | None = None
         self._pending: list[dict] = []
         assert engine.on_launch is None, (
             "engine already has a launch observer — one bridge per engine")
@@ -89,12 +95,36 @@ class TenantEngine:
         self.launches += len(descs)
         return produced, descs
 
+    def launch_dims(self, desc: dict) -> tuple[int, ...]:
+        """The GEMM dims one captured launch amounts to. A chunked prefill
+        launch runs ``prefill_len`` masked decode steps, so its macro-op is
+        the decode tile with M scaled by the valid chunk length — the
+        cluster then prices its compute honestly (``2·M·K·N``) instead of
+        as a single decode step."""
+        if "prefill_tokens" in desc:
+            n = max(int(desc["prefill_len"]), 1)
+            return (self.dims[0] * n, *self.dims[1:])
+        return self.dims
+
     def request(self, desc: dict, arrival_time: float) -> LaunchRequest:
-        """Mirror one captured descriptor into a cluster launch request."""
+        """Mirror one captured descriptor into a cluster launch request.
+        Calls must follow the engine's launch order — the per-dim-field
+        accounting mirrors the device cache's value comparison."""
+        dims = self.launch_dims(desc)
+        for i, d in enumerate(dims):
+            if self._last_dims is None or self._last_dims[i] != d:
+                self._dim_sends[i] += 1
+        self._last_dims = dims
         return descriptor_request(
-            self.tenant, desc, self.model, self.dims,
+            self.tenant, desc, self.model, dims,
             arrival_time=arrival_time, priority=self.priority,
         )
+
+    @property
+    def sync_bytes(self) -> int:
+        """The engine's per-decode-step device→host sync payload (sampled
+        ids under fused sampling; full logits under host sampling)."""
+        return getattr(self.engine, "sync_bytes", 0)
 
     def config_traffic(self) -> dict[str, float]:
         """The engine executor's own sent/elided split (leaf-granular)."""
@@ -107,20 +137,28 @@ class TenantEngine:
 
         * ``bytes_sent``  = engine bytes sent
                             + one launch-command write per launch
-                            + the GEMM tile registers once (first launch);
+                            + one tile-register write per dim-field *value
+                              change* (``_dim_sends`` — the first launch,
+                              plus every prefill↔decode M transition);
         * ``bytes_elided`` = engine bytes elided
-                             + the tile registers on every later launch.
+                             + the tile registers on every launch whose
+                               value the device already held.
 
-        Exact whenever each descriptor leaf's size divides the device's
-        ``bytes_per_field`` (int32 leaves on a 4-byte-field device); any
-        divergence means the cluster path dropped residency the engine
-        kept — the accounting-parity failure the benchmark must catch."""
+        With constant dims this reduces to the classic form (tile sent
+        once, elided ever after). Exact whenever each descriptor leaf's
+        size divides the device's ``bytes_per_field`` (int32 leaves on a
+        4-byte-field device); any divergence means the cluster path dropped
+        residency the engine kept — the accounting-parity failure the
+        benchmark must catch."""
         t = self.engine.config_traffic()
         bpf = self.model.bytes_per_field
-        tile_bytes = len(self.dims) * bpf
+        tile_sends = sum(self._dim_sends)
+        tile_slots = len(self.dims) * self.launches
         return {
-            "bytes_sent": t["bytes_sent"] + self.launches * bpf + tile_bytes,
-            "bytes_elided": t["bytes_elided"] + max(self.launches - 1, 0) * tile_bytes,
+            "bytes_sent": t["bytes_sent"] + self.launches * bpf
+            + tile_sends * bpf,
+            "bytes_elided": t["bytes_elided"]
+            + (tile_slots - tile_sends) * bpf,
         }
 
     def drain(self) -> None:

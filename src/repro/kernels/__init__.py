@@ -1,11 +1,13 @@
 """Pallas TPU kernels for the compute hot-spots (tiled GEMM — the paper's
-workload — incl. the scalar-prefetch 'configured' variant, and flash
-attention), each with a jit'd wrapper (ops.py) and a pure-jnp oracle
-(ref.py). Validated in interpret mode on CPU; ``backend="pallas"`` is the
-TPU target."""
+workload — incl. the scalar-prefetch 'configured' variant, flash
+attention, and the fused decode-sampling epilogue), each with a jit'd
+wrapper (ops.py) and a pure-jnp oracle (ref.py). Validated in interpret
+mode on CPU; ``backend="pallas"`` is the TPU target."""
 
 from . import ops, ref
 from .flash_attention import flash_attention
 from .matmul import configured_matmul, matmul
+from .sampling import greedy_sample, top_k
 
-__all__ = ["configured_matmul", "flash_attention", "matmul", "ops", "ref"]
+__all__ = ["configured_matmul", "flash_attention", "greedy_sample",
+           "matmul", "ops", "ref", "top_k"]

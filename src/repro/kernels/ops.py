@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention
 from .matmul import configured_matmul, matmul
+from .sampling import greedy_sample, top_k
 
 BACKENDS = ("xla", "pallas", "pallas_interpret")
 
@@ -41,3 +42,20 @@ def attention_op(q, k, v, causal: bool = True, backend: str = "xla", **kw):
     return flash_attention(
         q, k, v, causal=causal, interpret=(backend == "pallas_interpret"), **kw
     )
+
+
+def sample_op(logits, backend: str = "xla", **kw):
+    """Greedy sampling over (B, V) logits → (B,) int32 ids, lowest index
+    winning ties — the decode launch's fused epilogue."""
+    if backend == "xla":
+        return ref.greedy_sample_ref(logits)
+    return greedy_sample(
+        logits, interpret=(backend == "pallas_interpret"), **kw
+    )
+
+
+def top_k_op(logits, k: int, backend: str = "xla", **kw):
+    """Top-k (values, indices) over (B, V) logits, lax.top_k ordering."""
+    if backend == "xla":
+        return ref.top_k_ref(logits, k)
+    return top_k(logits, k, interpret=(backend == "pallas_interpret"), **kw)

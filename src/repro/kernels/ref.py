@@ -20,6 +20,18 @@ def configured_matmul_ref(
     return jnp.dot(a32, b32).astype(jnp.float32)
 
 
+def greedy_sample_ref(logits: jax.Array) -> jax.Array:
+    """Argmax over the last axis of (B, V) logits — lowest index wins ties
+    (the tie-break contract the fused sampling kernel must reproduce)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def top_k_ref(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """``lax.top_k`` in fp32: descending values, ties by lowest index."""
+    vals, idxs = jax.lax.top_k(logits.astype(jnp.float32), k)
+    return vals, idxs.astype(jnp.int32)
+
+
 def flash_attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
 ) -> jax.Array:

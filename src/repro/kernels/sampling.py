@@ -1,0 +1,120 @@
+"""Fused sampling Pallas kernels — the decode epilogue on-device.
+
+The serving engine's per-step synchronization point used to be the full
+``(B, vocab)`` logits tensor, transferred host-side just to run ``argmax``.
+That reduction is the decode launch's epilogue, and keeping it on the host
+re-widens the very boundary the §5.4 deduplicated-configuration design
+narrows: every decode step ships ``B·vocab`` floats back for a ``B``-word
+answer. These kernels fuse the reduction into the launch so the host blocks
+on a few bytes of token ids.
+
+* :func:`greedy_sample` — blocked argmax over the vocab dimension: the grid
+  walks vocab tiles in ascending order, a VMEM scratch carries the running
+  (max, index) per batch row, and the *lowest index wins ties* — bit-
+  identical to ``jnp.argmax`` (the tie-break contract the engine's
+  fused-vs-host parity test pins). Cross-block ties resolve by a strict
+  ``>`` (an earlier block's max is never displaced by an equal later one);
+  within-block ties resolve by a masked index minimum.
+
+* :func:`top_k` — k successive greedy passes with the winner masked to
+  ``-inf`` between passes: descending values, ties by lowest index —
+  the same ordering contract as ``jax.lax.top_k``.
+
+Both run in interpret mode on CPU (the test suite's path) and lower for
+TPU; ``kernels.ops`` exposes the usual ``backend=`` selection with the
+pure-jnp oracle in ``kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _greedy_kernel(x_ref, o_ref, max_ref, idx_ref, *, block_v: int,
+                   v_steps: int):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        max_ref[...] = jnp.full_like(max_ref, NEG_INF)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (b, block_v)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1) + j * block_v
+    bmax = jnp.max(x, axis=1, keepdims=True)  # (b, 1)
+    # lowest index among this block's maxima (tie-break within the block)
+    bidx = jnp.min(jnp.where(x == bmax, col, jnp.int32(v_steps * block_v)),
+                   axis=1, keepdims=True)
+    # strict > across blocks: an earlier block's equal max keeps its index
+    better = bmax > max_ref[...]
+    idx_ref[...] = jnp.where(better, bidx, idx_ref[...])
+    max_ref[...] = jnp.where(better, bmax, max_ref[...])
+
+    @pl.when(j == v_steps - 1)
+    def _flush():
+        o_ref[...] = idx_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def greedy_sample(
+    logits: jax.Array,
+    *,
+    block_v: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Argmax over the last axis of ``(B, V)`` logits → ``(B,)`` int32 ids,
+    lowest index winning ties (the ``jnp.argmax`` contract). The vocab is
+    padded to a whole number of blocks with ``-inf``, which can never beat
+    a real entry and never wins the cross-block strict-``>`` race."""
+    b, v = logits.shape
+    v_pad = -(-v // block_v) * block_v
+    x = logits.astype(jnp.float32)
+    if v_pad != v:
+        x = jnp.pad(x, ((0, 0), (0, v_pad - v)), constant_values=NEG_INF)
+    v_steps = v_pad // block_v
+    out = pl.pallas_call(
+        functools.partial(_greedy_kernel, block_v=block_v, v_steps=v_steps),
+        grid=(v_steps,),
+        in_specs=[pl.BlockSpec((b, block_v), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((b, 1), lambda j: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((b, 1), jnp.float32),  # running max per row
+            pltpu.VMEM((b, 1), jnp.int32),  # its (lowest) index
+        ],
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+    )(x)
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_v", "interpret"))
+def top_k(
+    logits: jax.Array,
+    k: int,
+    *,
+    block_v: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k values and indices over the last axis of ``(B, V)`` logits,
+    as k greedy passes with the winner masked between passes — descending
+    values, ties by lowest index (the ``lax.top_k`` ordering). Rows must
+    hold more than k entries above ``-inf`` for the k indices to be
+    distinct (``-inf`` is the mask sentinel)."""
+    b, v = logits.shape
+    assert 0 < k <= v, (k, v)
+    work = logits.astype(jnp.float32)
+    rows = jnp.arange(b)
+    vals, idxs = [], []
+    for _ in range(k):
+        idx = greedy_sample(work, block_v=block_v, interpret=interpret)
+        vals.append(work[rows, idx])
+        idxs.append(idx)
+        work = work.at[rows, idx].set(NEG_INF)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)

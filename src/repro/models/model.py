@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..kernels import ops as kernel_ops
 from . import layers as L
 from .config import ModelConfig
 
@@ -407,11 +408,20 @@ class Model:
         raise ValueError(cfg.family)
 
     def decode_step(
-        self, params: dict, cache: dict, tokens: Array, pos: Array
+        self, params: dict, cache: dict, tokens: Array, pos: Array,
+        update_mask: Array | None = None,
     ) -> tuple[Array, dict]:
         """One new token per sequence. tokens: (B, 1); pos: scalar int32, or
-        an (B,) int32 vector for continuous batching (per-slot positions)."""
+        an (B,) int32 vector for continuous batching (per-slot positions).
+
+        ``update_mask`` (optional, (B,) bool) freezes the cache rows of
+        unselected batch entries: masked-out slots still compute (their
+        logits are garbage to be discarded) but their cache state comes out
+        bit-identical to what went in. This is what lets one launch advance
+        only the slots it means to — a prefill chunk touching one admitted
+        slot, or a decode step skipping dead slots."""
         cfg = self.cfg
+        old_cache = cache
         x = params["embed"][tokens]  # (B, 1, d)
         b = x.shape[0]
         if getattr(pos, "ndim", 0) == 1:
@@ -430,9 +440,90 @@ class Model:
         else:
             raise ValueError(cfg.family)
 
+        if update_mask is not None:
+            cache = self._masked_cache(old_cache, cache, update_mask)
         x = _norm(params["final_norm"], x, cfg.norm_eps)
         logits = x @ self._head(params)
         return logits, cache
+
+    @staticmethod
+    def _masked_cache(old: dict, new: dict, update_mask: Array) -> dict:
+        """Per-leaf batch-row select: rows where ``update_mask`` is False
+        keep their old cache state bit-exactly. The batch axis is 1 on
+        every cache layout (layer/group axis leads) except the hybrid
+        trunk's per-group-stacked ``h``/``conv`` leaves, where it is 2."""
+        b = update_mask.shape[0]
+
+        def merge(key: str, o: Array, n: Array) -> Array:
+            if n is o:  # passthrough leaves (encdec xk/xv): nothing to mask
+                return n
+            ax = 2 if key in ("h", "conv") else 1
+            shape = [1] * n.ndim
+            shape[ax] = b
+            return jnp.where(update_mask.reshape(shape), n, o)
+
+        return {k: merge(k, old[k], n) for k, n in new.items()}
+
+    def decode_and_sample(
+        self, params: dict, cache: dict, prev_tokens: Array,
+        token_overrides: Array, override_mask: Array, pos: Array,
+        update_mask: Array | None = None, *, sample_backend: str = "xla",
+    ) -> tuple[Array, dict]:
+        """Fused decode step + greedy sampling: the launch returns ``(B, 1)``
+        int32 token ids instead of ``(B, vocab)`` logits, so the host's
+        per-step sync point shrinks from the full logits tensor to a few
+        bytes — and, because the sampled ids never leave the device, the
+        next launch's input tokens are device-resident state rather than a
+        descriptor field. The host injects tokens only through
+        ``token_overrides``/``override_mask`` (admissions, freed slots),
+        which elide in steady-state decode.
+
+        ``prev_tokens``: (B, 1) device-resident ids from the previous step;
+        ``token_overrides``: (B,) int32 host injections where
+        ``override_mask`` (B, bool) is set."""
+        tokens = jnp.where(override_mask[:, None],
+                           token_overrides[:, None].astype(jnp.int32),
+                           prev_tokens)
+        logits, cache = self.decode_step(params, cache, tokens, pos,
+                                         update_mask)
+        ids = kernel_ops.sample_op(logits[:, 0], backend=sample_backend)
+        return ids[:, None].astype(jnp.int32), cache
+
+    def prefill_chunk(
+        self, params: dict, cache: dict, chunk_tokens: Array, pos0: Array,
+        n_valid: Array, slot_mask: Array,
+    ) -> tuple[Array, dict]:
+        """Batched prefill: advance only the slots in ``slot_mask`` through
+        up to ``len(chunk_tokens)`` prompt tokens in **one launch** — a
+        ``lax.scan`` of masked decode steps, so a p-token prompt costs
+        ``ceil(p/chunk)`` launches instead of p full-batch launches.
+
+        ``chunk_tokens``: (T,) int32, valid through ``n_valid`` (padded
+        steps are fully masked — no slot advances); ``pos0``: (B,) int32
+        per-slot start positions (step i writes at ``pos0 + i``);
+        ``slot_mask``: (B,) bool selecting the admitted slot(s). Returns
+        ``(probe, cache)`` where probe is the (B, 1) int32 argmax of the
+        last valid step for the masked slots (a few-byte sync handle for
+        the staging ring; zeros for unmasked slots)."""
+        b = slot_mask.shape[0]
+
+        def body(carry, xs):
+            cache, probe = carry
+            i, tok = xs
+            step_mask = slot_mask & (i < n_valid)
+            toks = jnp.full((b, 1), tok, jnp.int32)
+            logits, cache = self.decode_step(params, cache, toks, pos0 + i,
+                                             step_mask)
+            ids = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+            probe = jnp.where(step_mask[:, None], ids[:, None], probe)
+            return (cache, probe), None
+
+        t = chunk_tokens.shape[0]
+        (cache, probe), _ = lax.scan(
+            body, (cache, jnp.zeros((b, 1), jnp.int32)),
+            (jnp.arange(t, dtype=jnp.int32), chunk_tokens.astype(jnp.int32)),
+        )
+        return probe, cache
 
     def _uniform_decode(self, trunk, cache, x, positions, pos):
         cfg = self.cfg

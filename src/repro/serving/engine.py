@@ -7,25 +7,46 @@ its own position (`decode_step` accepts an (B,) position vector). A finished
 request's slot is handed to the next queued request immediately — no
 drain-the-batch bubbles.
 
-Configuration-wall connection: the per-launch descriptor is exactly
-{tokens, positions, live-mask} — a few hundred bytes against a device-resident
-multi-GiB cache. The engine is the deduplicated-configuration serving design
-the paper's §5.4 implies: everything invariant lives on-device; only the
-changing fields cross the host→device boundary each step.
+Configuration-wall connection: the per-launch descriptor is a few dozen
+bytes against a device-resident multi-GiB cache — the deduplicated-
+configuration serving design the paper's §5.4 implies: everything invariant
+lives on-device; only the changing fields cross the host→device boundary
+each step. Two designs narrow that boundary further:
+
+* **Fused sampling** (``sampling="fused"``, the default): the decode launch
+  runs the greedy-sampling epilogue on-device
+  (:meth:`~repro.models.model.Model.decode_and_sample`, backed by the
+  ``kernels/sampling.py`` Pallas kernel) and returns ``(B, 1)`` token ids —
+  the host blocks on a few bytes instead of the full ``(B, vocab)`` logits.
+  Because the sampled ids stay device-resident and feed the next launch
+  directly, the decode descriptor drops its ``tokens`` leaf entirely: the
+  host injects tokens only through ``token_overrides``/``override_mask``
+  (admissions and freed slots), which elide in steady-state decode. The
+  steady-state descriptor is ``{positions}`` plus elided residents — the
+  narrowest the boundary gets. ``sampling="host"`` keeps the classic
+  logits-returning launch (the A/B baseline, bit-identical token streams).
+
+* **Batched prefill**: admission runs the prompt through
+  :meth:`~repro.models.model.Model.prefill_chunk` — ``ceil(p/chunk)``
+  masked launches instead of p full-batch steps, each advancing *only* the
+  admitted slot (other slots' cache rows stay bit-identical through an
+  admission). The prefill descriptor (``prefill_tokens``/``prefill_len``/
+  ``slot_mask``) is priced by the bridge like any other launch.
 
 Every launch goes through a :class:`~repro.dispatch.ScheduledExecutor`
 (``engine.executor``): descriptor elision drives the *real* launch path,
 not just accounting. The executor's
 :class:`~repro.sched.state_cache.ConfigStateCache` (aliased as
-``engine.config_cache``) splits each descriptor into sent vs. device-resident
-fields (sampling config always; the live-mask between admissions), and its
-depth-bounded staging ring keeps prefill launches in flight while the host
-prepares the next one — the serving twin of OpenGeMM's staged configuration.
-``engine.config_traffic()`` reports the split for roofline placement.
+``engine.config_cache``) splits each descriptor into sent vs.
+device-resident fields, and its depth-bounded staging ring keeps prefill
+launches in flight while the host prepares the next one — the serving twin
+of OpenGeMM's staged configuration. ``engine.config_traffic()`` reports the
+split for roofline placement.
 """
 
 from __future__ import annotations
 
+import functools
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -48,23 +69,44 @@ class Request:
 class ServingEngine:
     def __init__(self, model, params, *, max_slots: int = 4, max_len: int = 256,
                  eos_id: int | None = None, launch_depth: int = 2,
-                 decode_fn=None, on_launch=None):
+                 decode_fn=None, prefill_fn=None, on_launch=None,
+                 sampling: str = "fused", sample_backend: str = "xla",
+                 prefill_chunk: int = 8):
+        assert sampling in ("fused", "host"), sampling
+        assert prefill_chunk >= 1, prefill_chunk
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.sampling = sampling
+        self.prefill_chunk = prefill_chunk
         self.cache = model.init_cache(max_slots, max_len)
         self.positions = np.zeros((max_slots,), np.int32)
+        # host mirror of each slot's pending input token (the descriptor
+        # field in host mode; bookkeeping only under fused sampling, where
+        # the device-resident ids are the real input ring)
         self.tokens = np.zeros((max_slots, 1), np.int32)
+        # fused sampling: host→device token injections for the next decode
+        # launch (admitted prompts' last token; zero for freed slots) —
+        # all-False mask in steady state, so both leaves elide
+        self._overrides = np.zeros((max_slots,), np.int32)
+        self._override_mask = np.zeros((max_slots,), bool)
+        if sampling == "fused":
+            # the device-resident sampled ids (previous launch's output,
+            # next launch's input — never crosses the boundary)
+            self._dev_tokens = jnp.zeros((max_slots, 1), jnp.int32)
         self.slot_req: list[Request | None] = [None] * max_slots
         self.queue: deque[Request] = deque()
         self.finished: list[Request] = []
-        # decode_fn lets N engines of one model share a single compiled
-        # step (the bridge runs many tenant engines of the same
-        # architecture; each call still passes its own donated cache)
-        self._decode = decode_fn or jax.jit(model.decode_step,
-                                            donate_argnums=(1,))
+        # decode_fn/prefill_fn let N engines of one model share a single
+        # compiled step (the bridge runs many tenant engines of the same
+        # architecture; each call still passes its own donated cache). A
+        # caller-supplied decode_fn must match the engine's sampling mode
+        # (use compile_decode(model, sampling=...)).
+        self._decode = decode_fn or ServingEngine.compile_decode(
+            model, sampling=sampling, sample_backend=sample_backend)
+        self._prefill = prefill_fn or ServingEngine.compile_prefill(model)
         # launch observer: called with every launch descriptor *after* it
         # goes through the executor — the seam ``repro.bridge`` taps to
         # mirror the real decode launch stream into cluster LaunchRequests
@@ -74,44 +116,92 @@ class ServingEngine:
         # launches in flight) and the config-state cache — one context, the
         # engine is one tenant of its device. Its descriptor elision is the
         # launch path itself, not a side accounting.
-        # sync on the logits: the KV cache is donated launch-to-launch, so
-        # only the per-step output is safe to block on
+        # sync on the per-launch payload (sampled ids / logits / prefill
+        # probe): the KV cache is donated launch-to-launch, so only the
+        # per-step output is safe to block on
         self.executor = ScheduledExecutor(self._device_fn, depth=launch_depth,
                                           tenant="engine",
                                           sync_fn=lambda out: out[1])
         self.config_cache = self.executor.cache
 
     def _device_fn(self, state, desc):
-        """One decode launch from a cached descriptor: only ``tokens`` and
-        ``positions`` parameterize the kernel; everything else in the
-        descriptor is device-resident configuration."""
+        """One launch from a cached descriptor. Three launch kinds share the
+        path: chunked prefill (keyed by ``prefill_tokens``), fused decode
+        (device-resident token ring + host overrides → sampled ids), and
+        host-sampling decode (``tokens`` field → full logits)."""
         params, cache = state
+        if "prefill_tokens" in desc:
+            probe, cache = self._prefill(
+                params, cache,
+                jnp.asarray(desc["prefill_tokens"]),
+                jnp.asarray(desc["positions"]),
+                jnp.asarray(desc["prefill_len"]),
+                jnp.asarray(desc["slot_mask"]),
+            )
+            return (params, cache), probe
+        if self.sampling == "fused":
+            ids, cache = self._decode(
+                params, cache, self._dev_tokens,
+                jnp.asarray(desc["token_overrides"]),
+                jnp.asarray(desc["override_mask"]),
+                jnp.asarray(desc["positions"]),
+                jnp.asarray(desc["live_mask"]),
+            )
+            self._dev_tokens = ids  # loopback: next launch's input tokens
+            return (params, cache), ids
         logits, cache = self._decode(
             params, cache, jnp.asarray(desc["tokens"]),
             jnp.asarray(desc["positions"]),
+            jnp.asarray(desc["live_mask"]),
         )
         return (params, cache), logits
 
     def _launch(self, desc: dict):
         """Stage one launch through the executor; adopts the new KV cache
-        and returns the (possibly still in-flight) logits."""
-        (_, self.cache), logits = self.executor.launch(
+        and returns the (possibly still in-flight) per-launch payload."""
+        (_, self.cache), out = self.executor.launch(
             (self.params, self.cache), desc
         )
         if self.on_launch is not None:
             self.on_launch(desc)
-        return logits
+        return out
 
     @staticmethod
-    def compile_decode(model):
+    def compile_decode(model, sampling: str = "fused",
+                       sample_backend: str = "xla"):
         """One compiled decode step, shareable across every engine of the
         same architecture (`decode_fn=`): N bridged tenant engines then pay
-        a single JIT compilation instead of N."""
+        a single JIT compilation instead of N. ``sampling="fused"`` returns
+        the fused decode+sample step (ids out); ``"host"`` the classic
+        logits-returning step. Must match the engines' ``sampling=``."""
+        if sampling == "fused":
+            return jax.jit(
+                functools.partial(model.decode_and_sample,
+                                  sample_backend=sample_backend),
+                donate_argnums=(1,),
+            )
         return jax.jit(model.decode_step, donate_argnums=(1,))
+
+    @staticmethod
+    def compile_prefill(model):
+        """One compiled chunked-prefill launch (`prefill_fn=`), shareable
+        like :meth:`compile_decode` (one shape per chunk size)."""
+        return jax.jit(model.prefill_chunk, donate_argnums=(1,))
 
     # ---------------------------------------------------------------- admin
 
     def submit(self, req: Request) -> None:
+        """Queue a request. Rejects prompts the slot layout cannot hold:
+        an empty prompt has no token to start decode from, and a prompt of
+        ``max_len`` or more would overrun the slot's KV rows before the
+        first generated token."""
+        if not req.prompt:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt of {len(req.prompt)} tokens "
+                f"needs max_len > {len(req.prompt)} (engine max_len="
+                f"{self.max_len}) — it would overrun the KV cache")
         self.queue.append(req)
 
     @property
@@ -124,20 +214,40 @@ class ServingEngine:
                 continue
             req = self.queue.popleft()
             self.slot_req[slot] = req
-            # prefill by stepping the prompt through the cache (simple
-            # token-at-a-time prefill; a production engine would batch this)
             self.positions[slot] = 0
-            for tok in req.prompt[:-1]:
-                self._step_single_slot(slot, tok)
-            self.tokens[slot, 0] = req.prompt[-1]
+            # chunked prefill: all prompt tokens but the last stream through
+            # masked launches that advance only this slot; launches stay
+            # staged in the executor's ring (no sync), overlapping host
+            # descriptor prep with device work
+            ptoks = req.prompt[:-1]
+            for start in range(0, len(ptoks), self.prefill_chunk):
+                self._prefill_launch(slot, ptoks[start:start + self.prefill_chunk])
+            # the prompt's last token seeds the first decode step
+            self._set_token(slot, req.prompt[-1])
 
-    def _step_single_slot(self, slot: int, token: int) -> None:
-        toks = self.tokens.copy()
-        toks[slot, 0] = token
-        # prefill needs no logits: launches stay staged in the executor's
-        # ring, overlapping host descriptor prep with device work
-        self._launch(self._launch_descriptor(self.live_slots, tokens=toks))
-        self.positions[slot] += 1
+    def _prefill_launch(self, slot: int, chunk: list[int]) -> None:
+        n = len(chunk)
+        buf = np.zeros((self.prefill_chunk,), np.int32)
+        buf[:n] = chunk
+        mask = np.zeros((self.max_slots,), bool)
+        mask[slot] = True
+        self._launch({
+            "prefill_tokens": buf,
+            "prefill_len": np.int32(n),
+            "positions": self.positions.copy(),
+            "slot_mask": mask,
+            **self._invariant_fields(),
+        })
+        self.positions[slot] += n
+
+    def _set_token(self, slot: int, tok: int) -> None:
+        """Point a slot's next decode input at ``tok`` — the host mirror
+        always; plus a device override under fused sampling (the only way
+        a host token enters the device-resident ring)."""
+        self.tokens[slot, 0] = tok
+        if self.sampling == "fused":
+            self._overrides[slot] = tok
+            self._override_mask[slot] = True
 
     # ----------------------------------------------------------------- step
 
@@ -147,9 +257,15 @@ class ServingEngine:
         live = self.live_slots
         if not live:
             return 0
-        logits = self._launch(self._launch_descriptor(live))
-        # sampling is the synchronization point: argmax needs the logits
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        out = self._launch(self._decode_descriptor(live))
+        # sampling is the synchronization point. Fused: the launch already
+        # sampled on-device — block on (B,) ids, a few bytes. Host: argmax
+        # here needs the full (B, vocab) logits across the boundary first.
+        if self.sampling == "fused":
+            self._override_mask[:] = False  # consumed by the staged launch
+            nxt = np.asarray(out[:, 0], np.int32)
+        else:
+            nxt = np.asarray(jnp.argmax(out[:, 0], axis=-1), np.int32)
         produced = 0
         for slot in live:
             req = self.slot_req[slot]
@@ -168,24 +284,52 @@ class ServingEngine:
                 self.finished.append(req)
                 self.slot_req[slot] = None  # slot freed for the next request
                 self.positions[slot] = 0
+                # zero the freed slot's token state: later descriptors must
+                # not carry (or dedup against) the dead request's last token
+                self._set_token(slot, 0)
         return produced
 
-    def _launch_descriptor(self, live: list[int],
-                           tokens: np.ndarray | None = None) -> dict:
+    def _decode_descriptor(self, live: list[int]) -> dict:
         """The fields that parameterize one decode launch. Copies snapshot
-        the mutable host buffers so cached values stay bit-stable; a
-        prefill override in ``tokens`` is already a fresh array."""
+        the mutable host buffers so cached values stay bit-stable. Fused
+        sampling has no ``tokens`` leaf: input ids are device-resident, and
+        the override pair is all-zero/all-False (elided) except on the step
+        after an admission or a free."""
         mask = np.zeros((self.max_slots,), bool)
         mask[live] = True
-        return {
-            "tokens": self.tokens.copy() if tokens is None else tokens,
+        desc = {
             "positions": self.positions.copy(),
             "live_mask": mask,
-            # invariant sampling/shape config: elided after the first launch
+            **self._invariant_fields(),
+        }
+        if self.sampling == "fused":
+            desc["token_overrides"] = self._overrides.copy()
+            desc["override_mask"] = self._override_mask.copy()
+        else:
+            desc["tokens"] = self.tokens.copy()
+        return desc
+
+    def _invariant_fields(self) -> dict:
+        """Sampling/shape config common to every launch kind — sent once,
+        device-resident (elided) afterwards."""
+        return {
             "max_len": np.int32(self.max_len),
             "eos_id": np.int32(-1 if self.eos_id is None else self.eos_id),
             "n_slots": np.int32(self.max_slots),
         }
+
+    @property
+    def sync_bytes(self) -> int:
+        """Device→host bytes the host blocks on per decode step — the
+        sampling synchronization the closed-loop driver prices on the
+        feedback edge. Fused sampling returns ``(B, 1)`` int32 ids; host
+        sampling pulls the full ``(B, vocab)`` logits across the boundary
+        just to argmax them."""
+        if self.sampling == "fused":
+            return self.max_slots * 4
+        from repro.models.layers import COMPUTE_DTYPE
+        vocab = self.model.cfg.vocab_size
+        return self.max_slots * vocab * np.dtype(COMPUTE_DTYPE).itemsize
 
     def config_traffic(self) -> dict[str, float]:
         """Config bytes sent vs. elided across all launches so far

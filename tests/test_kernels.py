@@ -98,3 +98,75 @@ def test_xla_backend_is_the_oracle():
         np.asarray(ops.matmul_op(a, b, backend="xla")),
         np.asarray(ref.matmul_ref(a, b)),
     )
+
+
+# ------------------------------------------------------------------ sampling
+
+SAMPLE_SHAPES = [(4, 256), (1, 151), (3, 1000), (8, 64)]
+
+
+@pytest.mark.parametrize("shape", SAMPLE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_greedy_sample_matches_argmax(shape, dtype):
+    """Token ids are exact (not allclose): sampling is the decode launch's
+    synchronization payload, so the fused kernel must be bit-identical to
+    jnp.argmax on every backend."""
+    logits = _rand(jax.random.key(7), shape, dtype)
+    want = np.asarray(ref.greedy_sample_ref(logits))
+    got = np.asarray(ops.sample_op(logits, backend="pallas_interpret"))
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+
+
+@pytest.mark.parametrize("block_v", [64, 128, 256])
+def test_greedy_sample_block_shapes(block_v):
+    logits = _rand(jax.random.key(11), (4, 777), jnp.float32)
+    got = ops.sample_op(logits, backend="pallas_interpret", block_v=block_v)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(ref.greedy_sample_ref(logits)))
+
+
+def test_greedy_sample_ties_take_lowest_index():
+    """The jnp.argmax tie contract, including ties that span vocab blocks
+    and the all-equal row (winner must be index 0)."""
+    v = 512
+    rows = np.full((4, v), -1.0, np.float32)
+    rows[0, [5, 130, 300]] = 3.0     # tie across three 128-wide blocks
+    rows[1, [200, 201]] = 2.5        # adjacent tie inside one block
+    rows[2, :] = 0.0                 # all equal
+    rows[3, v - 1] = 9.0             # winner in the final block
+    logits = jnp.asarray(rows)
+    want = np.asarray(ref.greedy_sample_ref(logits))
+    np.testing.assert_array_equal(want, [5, 200, 0, v - 1])
+    got = np.asarray(ops.sample_op(logits, backend="pallas_interpret"))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 6),
+       v=st.integers(2, 400))
+def test_greedy_sample_property_backend_parity(seed, b, v):
+    logits = jax.random.randint(
+        jax.random.key(seed), (b, v), -5, 5).astype(jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.sample_op(logits, backend="pallas_interpret")),
+        np.asarray(ref.greedy_sample_ref(logits)))
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_top_k_matches_lax(k):
+    logits = _rand(jax.random.key(13), (3, 320), jnp.float32)
+    want_v, want_i = ref.top_k_ref(logits, k)
+    got_v, got_i = ops.top_k_op(logits, k, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_allclose(
+        np.asarray(got_v, np.float32), np.asarray(want_v, np.float32),
+        rtol=1e-6)
+
+
+def test_top_k_k1_is_greedy():
+    logits = _rand(jax.random.key(17), (5, 200), jnp.bfloat16)
+    _, idx = ops.top_k_op(logits, 1, backend="pallas_interpret")
+    np.testing.assert_array_equal(
+        np.asarray(idx[:, 0]),
+        np.asarray(ops.sample_op(logits, backend="pallas_interpret")))

@@ -103,6 +103,145 @@ def test_int8_cache_decode_top1_agreement(small_model):
     np.testing.assert_allclose(a, b, rtol=0.2, atol=0.5)
 
 
+def test_submit_rejects_empty_prompt(small_model):
+    cfg, model, params = small_model
+    engine = ServingEngine(model, params, max_slots=2, max_len=16)
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine.submit(Request(uid=0, prompt=[], max_new_tokens=4))
+
+
+def test_submit_rejects_prompt_at_or_over_max_len(small_model):
+    cfg, model, params = small_model
+    engine = ServingEngine(model, params, max_slots=2, max_len=8)
+    with pytest.raises(ValueError, match="overrun"):
+        engine.submit(Request(uid=0, prompt=list(range(8)), max_new_tokens=1))
+    with pytest.raises(ValueError, match="overrun"):
+        engine.submit(Request(uid=1, prompt=list(range(12)), max_new_tokens=1))
+    # the boundary case is admissible and yields exactly one token: the
+    # prompt fills positions 0..6, leaving room for a single decode step
+    engine.submit(Request(uid=2, prompt=[1, 2, 3, 4, 5, 6, 7],
+                          max_new_tokens=100))
+    (done,) = engine.run_until_done()
+    assert len(done.generated) == 1
+
+
+def test_max_len_terminates_at_exact_token_count(small_model):
+    """max_len=8, prompt of 3: prefill holds positions 0..1, decode starts
+    at position 2 and must stop when the slot's next write would overrun —
+    exactly 5 generated tokens, never 4 or 6."""
+    cfg, model, params = small_model
+    engine = ServingEngine(model, params, max_slots=2, max_len=8)
+    engine.submit(Request(uid=0, prompt=[5, 9, 2], max_new_tokens=100))
+    (done,) = engine.run_until_done()
+    assert len(done.generated) == 5
+    # and a max_new_tokens bound below the ceiling wins instead
+    engine.submit(Request(uid=1, prompt=[5, 9, 2], max_new_tokens=3))
+    done = engine.run_until_done()[-1]
+    assert len(done.generated) == 3
+
+
+def test_masked_prefill_leaves_other_slots_bit_identical(small_model):
+    """Admission prefill is masked to the admitted slot: a resident slot's
+    KV rows must survive another request's whole prefill chain untouched
+    (the over-stepping regression), while the admitted slot's rows fill."""
+    cfg, model, params = small_model
+    engine = ServingEngine(model, params, max_slots=2, max_len=32,
+                           prefill_chunk=4)
+    engine.submit(Request(uid=0, prompt=[5, 9, 2, 7, 1], max_new_tokens=20))
+    engine.step()  # admit + first decode: slot 0 now holds live KV state
+    engine.executor.drain()
+    before_k = np.asarray(engine.cache["k"][:, 0])
+    before_v = np.asarray(engine.cache["v"][:, 0])
+    assert before_k.any(), "slot 0 should hold prefill state already"
+    # admit uid=1 alone (no decode step): only its prefill launches run
+    engine.submit(Request(uid=1, prompt=[3, 3, 4, 4, 6, 6, 8], max_new_tokens=4))
+    engine._admit()
+    engine.executor.drain()
+    np.testing.assert_array_equal(np.asarray(engine.cache["k"][:, 0]), before_k)
+    np.testing.assert_array_equal(np.asarray(engine.cache["v"][:, 0]), before_v)
+    assert np.asarray(engine.cache["k"][:, 1]).any(), \
+        "slot 1's rows should have been written by its prefill"
+
+
+def test_fused_descriptor_drops_tokens_leaf_and_pins_bytes(small_model):
+    """The fused decode descriptor has no ``tokens`` leaf (ids are
+    device-resident) and its wire size is pinned: positions 16 + live_mask 4
+    + token_overrides 16 + override_mask 4 + invariants 12 = 52 bytes; the
+    host-sampling descriptor carries tokens (4×int32) instead of the
+    override pair: 48 bytes."""
+    cfg, model, params = small_model
+
+    def steady_desc(sampling):
+        captured = []
+        engine = ServingEngine(model, params, max_slots=4, max_len=16,
+                               sampling=sampling, on_launch=captured.append)
+        engine.submit(Request(uid=0, prompt=[3], max_new_tokens=4))
+        engine.run_until_done()
+        decode = [d for d in captured if "prefill_tokens" not in d]
+        assert len(decode) == 4
+        return decode[-1]
+
+    fused = steady_desc("fused")
+    assert "tokens" not in fused
+    assert set(fused) == {"positions", "live_mask", "token_overrides",
+                          "override_mask", "max_len", "eos_id", "n_slots"}
+    assert sum(np.asarray(v).nbytes for v in fused.values()) == 52
+
+    host = steady_desc("host")
+    assert "token_overrides" not in host
+    assert set(host) == {"positions", "live_mask", "tokens",
+                         "max_len", "eos_id", "n_slots"}
+    assert sum(np.asarray(v).nbytes for v in host.values()) == 48
+
+
+def test_freed_slot_token_state_is_zeroed(small_model):
+    """A finished request's slot must not leak its last token into later
+    descriptors: the host mirror and the fused override both reset to 0,
+    and the slot's next occupant decodes identically to a fresh engine."""
+    cfg, model, params = small_model
+    captured = []
+    engine = ServingEngine(model, params, max_slots=1, max_len=32,
+                           on_launch=captured.append)
+    engine.submit(Request(uid=0, prompt=[7, 7], max_new_tokens=2))
+    engine.submit(Request(uid=1, prompt=[5, 9], max_new_tokens=4))
+    done = engine.run_until_done()
+    assert [r.uid for r in done] == [0, 1]
+    assert engine.tokens[0, 0] == 0 and engine._overrides[0] == 0
+    # the freed slot's zeroing is visible on the wire: the decode launch
+    # right after uid=0 retired carries uid=1's admission override, not
+    # uid=0's stale last token
+    decode = [d for d in captured if "prefill_tokens" not in d]
+    stale = int(done[0].generated[-1])
+    relaunch = decode[2]  # steps 0-1 served uid=0; step 2 admits uid=1
+    assert relaunch["override_mask"][0]
+    assert relaunch["token_overrides"][0] == 9 != stale
+
+    fresh = ServingEngine(model, params, max_slots=1, max_len=32)
+    fresh.submit(Request(uid=1, prompt=[5, 9], max_new_tokens=4))
+    (want,) = fresh.run_until_done()
+    assert done[1].generated == want.generated
+
+
+@pytest.mark.parametrize("variant", [
+    {"sampling": "host"},
+    {"sampling": "fused", "sample_backend": "pallas_interpret"},
+])
+def test_sampling_modes_bit_identical_streams(small_model, variant):
+    """Fused on-device sampling (XLA argmax or the Pallas kernel) and
+    host-side argmax must produce bit-identical token streams — sampling
+    placement is a boundary optimization, never a semantic change."""
+    cfg, model, params = small_model
+    prompts = [[5, 9, 2], [7, 1], [3, 3, 3, 3], [11]]
+
+    def run(**kw):
+        engine = ServingEngine(model, params, max_slots=2, max_len=32, **kw)
+        for i, p in enumerate(prompts):
+            engine.submit(Request(uid=i, prompt=list(p), max_new_tokens=6))
+        return {r.uid: r.generated for r in engine.run_until_done()}
+
+    assert run(sampling="fused") == run(**variant)
+
+
 def test_int8_cache_halves_bytes(small_model):
     cfg, model, params = small_model
     cfg_q = dataclasses.replace(cfg, cache_quant="int8")
