@@ -93,11 +93,16 @@ def descriptor_request(
     arrival_time: float = 0.0,
     priority: int = 0,
     deadline: float | None = None,
+    kernel: str = "matmul",
 ) -> LaunchRequest:
     """One engine launch as a cluster :class:`LaunchRequest`: the config
     payload is the *real* descriptor (as digest fields), ``dims`` sizes the
-    decode macro-op (the tenant's per-step GEMM tile), and ``accel`` pins
-    the request to the device kind modelling the engine's accelerator."""
+    decode macro-op (the tenant's per-step GEMM tile), ``accel`` pins the
+    request to the device kind modelling the engine's accelerator, and
+    ``kernel`` names the analytical cost-model shape class
+    (``engine.costmodel``) — ``"decode"``/``"prefill"`` price GEMM-shaped
+    launches, a calibrated scheduler ignores unknown names and falls back
+    to the flat per-launch constant."""
     return LaunchRequest(
         tenant=tenant,
         dims=dims,
@@ -106,4 +111,5 @@ def descriptor_request(
         arrival_time=arrival_time,
         priority=priority,
         deadline=deadline,
+        kernel=kernel,
     )

@@ -70,6 +70,7 @@ class StepRecord:
     config_cycles: float = 0.0  # T_set of the step's descriptors
     exposed_config: float = 0.0  # ... the part the engine failed to hide
     readback_cycles: float = 0.0  # device→host sampling sync on the link
+    compute_cycles: float = 0.0  # device cycles the step's macro-ops ran
 
     @property
     def latency(self) -> float:
@@ -121,14 +122,25 @@ class ClosedLoopDriver:
         router = self.cluster.router
         host = router.route(req, now=now)
         dev = host.dispatch(req)
+        if dev is None:
+            # the tenant's config-bandwidth quota window was exhausted and
+            # the launch parked (``Host.dispatch`` deferred it). The closed
+            # loop must observe its completion before releasing the next
+            # step, so force it through at its window release edge — the
+            # deferral still lands in this tenant's own step latency
+            host.flush_deferred()
+            devices = host.devices
+        else:
+            devices = [dev]
         if router.home(te.tenant) is None:
             # first launch anywhere: the KV cache materializes here
             host.adopt_context(te.tenant)
-        for rec in reversed(dev.telemetry.launch_log):
-            if rec.tenant == req.tenant and rec.arrival == req.arrival_time:
-                return rec, host
+        for d in devices:
+            for rec in reversed(d.telemetry.launch_log):
+                if rec.tenant == req.tenant and rec.arrival == req.arrival_time:
+                    return rec, host
         raise AssertionError(
-            f"dispatched launch for {req.tenant!r} left no record on {dev.id}")
+            f"dispatched launch for {req.tenant!r} left no record on {host.id}")
 
     @staticmethod
     def _readback_cycles(te: TenantEngine, link) -> float:
@@ -163,7 +175,7 @@ class ClosedLoopDriver:
                 continue
             t = now
             sent = elided = 0
-            cfg = exposed = 0.0
+            cfg = exposed = comp = 0.0
             host = None
             for desc in descs:
                 rec, host = self._dispatch(te, desc, t)
@@ -172,6 +184,7 @@ class ClosedLoopDriver:
                 elided += rec.bytes_elided
                 cfg += rec.config_cycles
                 exposed += rec.exposed_config
+                comp += rec.end - rec.start
             # feedback edge: the host blocks on the step's sampling sync
             # before it can release this tenant's next step
             rb = self._readback_cycles(te, host.link if host else None)
@@ -190,6 +203,7 @@ class ClosedLoopDriver:
                 config_cycles=cfg,
                 exposed_config=exposed,
                 readback_cycles=rb,
+                compute_cycles=comp,
             ))
             if self.monitor is not None:
                 feed_step(self.monitor, tenant=name, completion=t,

@@ -115,9 +115,14 @@ class TenantEngine:
             if self._last_dims is None or self._last_dims[i] != d:
                 self._dim_sends[i] += 1
         self._last_dims = dims
+        # tag the cost-model shape class: a calibrated scheduler prices
+        # chunked prefill (M scaled by the chunk) and single-step decode
+        # through the same fitted GEMM model but as distinct streams
+        kernel = "prefill" if "prefill_tokens" in desc else "decode"
         return descriptor_request(
             self.tenant, desc, self.model, dims,
             arrival_time=arrival_time, priority=self.priority,
+            kernel=kernel,
         )
 
     @property

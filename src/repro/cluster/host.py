@@ -40,6 +40,9 @@ What the router reads off a host:
 
 from __future__ import annotations
 
+import heapq
+import itertools
+
 from ..core.accelerators import REGISTRY, AcceleratorModel
 from ..core.roofline import (
     RooflinePoint,
@@ -50,6 +53,55 @@ from ..core.roofline import (
 from ..fabric.link import LinkModel, LinkPort
 from ..sched.scheduler import Device, LaunchRequest, Scheduler
 from ..sched.telemetry import SchedulerReport
+
+
+class ConfigQuota:
+    """Per-tenant configuration-bandwidth quota at one host port.
+
+    Caps how many config bytes a tenant may put on the host's port per
+    ``window`` host cycles. A launch that would overrun its tenant's budget
+    is **deferred to the next window, never dropped** — the excess lands in
+    that tenant's own queueing delay (its ``arrival_time`` is unchanged, so
+    the deferral is visible in its latency percentiles) while neighbors
+    keep the port's residual bandwidth. ``budgets`` overrides the default
+    per tenant; a budget of ``None`` exempts the tenant.
+
+    Accounting is by window index (``t // window``): a tenant may start a
+    launch in any window whose spend is still under budget, so one launch
+    may overshoot its window by its own size — the cap is a rate limit, not
+    an admission-control byte gate (a single launch larger than the budget
+    still runs, once per window)."""
+
+    def __init__(self, bytes_per_window: int, window: float,
+                 budgets: dict[str, int | None] | None = None):
+        assert bytes_per_window > 0 and window > 0
+        self.bytes_per_window = int(bytes_per_window)
+        self.window = float(window)
+        self.budgets = dict(budgets or {})
+        self._spent: dict[tuple[str, int], int] = {}
+
+    def budget_for(self, tenant: str) -> int | None:
+        return self.budgets.get(tenant, self.bytes_per_window)
+
+    def spent(self, tenant: str, now: float) -> int:
+        """Bytes the tenant has already charged to ``now``'s window."""
+        return self._spent.get((tenant, int(now // self.window)), 0)
+
+    def release_time(self, tenant: str, now: float) -> float:
+        """Earliest time ≥ ``now`` the tenant may start a launch without
+        overrunning a window's budget (``now`` itself while the current
+        window has headroom, else the next window boundary)."""
+        budget = self.budget_for(tenant)
+        if budget is None:
+            return now
+        if self.spent(tenant, now) < budget:
+            return now
+        return (int(now // self.window) + 1) * self.window
+
+    def charge(self, tenant: str, now: float, nbytes: int) -> None:
+        """Record ``nbytes`` of config traffic in ``now``'s window."""
+        key = (tenant, int(now // self.window))
+        self._spent[key] = self._spent.get(key, 0) + int(nbytes)
 
 
 class Host:
@@ -75,7 +127,9 @@ class Host:
         staging_buffers: int = 2,
         transport: str = "auto",
         objective: str = "cycles",
+        compute_model=None,
         power=None,
+        quota: ConfigQuota | None = None,
         port: LinkPort | None = None,
         tracer=None,
     ):
@@ -89,8 +143,18 @@ class Host:
                                link=link, overlap=overlap,
                                staging_buffers=staging_buffers,
                                transport=transport, objective=objective,
+                               compute_model=compute_model,
                                power=power, port=port,
                                tracer=bound)
+        # per-tenant config-bandwidth quota at this port (None = uncapped).
+        # Over-budget launches park in the deferred heap until their window
+        # release edge; they are flushed lazily — at the next dispatch
+        # whose arrival has passed the edge, or at report() — so the host
+        # clock is never idled forward past a neighbor's earlier arrival.
+        self.quota = quota
+        self._deferred: list[tuple[float, float, int, LaunchRequest]] = []
+        self._defer_seq = itertools.count()
+        self.deferred_launches = 0
         # tenants whose *slot context* (a hosted engine shard's KV cache)
         # lives on this host — the binding residency the sticky router
         # consults; distinct from register-cache warmth, which is advisory
@@ -182,10 +246,16 @@ class Host:
         cycles) both live in ``Resource.backlog``. Under DMA/host overlap
         the wire can outrun the control thread, and with a shared cluster
         LinkPort it carries other hosts' transfers too — both show up here
-        automatically because the wire resource is the port's. ``req`` is
-        reserved for request-dependent waits (per-tenant port quotas) —
-        currently every request sees the same wait."""
-        return self.sched.res.port_wait(now)
+        automatically because the wire resource is the port's. With a
+        per-tenant config-bandwidth ``quota``, ``req`` matters: a tenant
+        that has exhausted its window waits at least until the window
+        rolls over, so the router steers its launches toward hosts with
+        budget left while neighbors still see only the resource wait."""
+        wait = self.sched.res.port_wait(now)
+        if self.quota is not None and req is not None:
+            wait = max(wait,
+                       self.quota.release_time(req.tenant, now) - now)
+        return wait
 
     def port_backlog(self, now: float) -> float:
         """Cycles of config work already committed past the wall clock —
@@ -235,12 +305,77 @@ class Host:
 
     # -- dispatch ------------------------------------------------------------
 
-    def dispatch(self, req: LaunchRequest) -> Device:
-        return self.sched.dispatch(req)
+    def dispatch(self, req: LaunchRequest) -> Device | None:
+        """Dispatch (or, under a config-bandwidth quota, defer) one launch.
+
+        Returns the device the launch ran on, or ``None`` when the
+        tenant's quota window is exhausted and the launch was parked — it
+        will run at its window's release edge (flushed lazily, or force it
+        with :meth:`flush_deferred`), with queueing delay measured from
+        its unchanged ``arrival_time``."""
+        if self.quota is None:
+            return self.sched.dispatch(req)
+        # launches whose release edge has passed go first — they have been
+        # waiting since before this arrival (the host clock only ever moves
+        # to release points ≤ this arrival, so no neighbor is delayed)
+        self._release_deferred(upto=req.arrival_time)
+        start = max(req.arrival_time, self.clock)
+        release = self.quota.release_time(req.tenant, start)
+        if release > start:
+            self._defer(req, release)
+            return None
+        return self._dispatch_charged(req)
+
+    def _defer(self, req: LaunchRequest, release: float) -> None:
+        heapq.heappush(self._deferred,
+                       (release, req.arrival_time, next(self._defer_seq), req))
+        self.deferred_launches += 1
+
+    def _dispatch_charged(self, req: LaunchRequest,
+                          not_before: float = 0.0) -> Device:
+        dev = self.sched.dispatch(req, not_before=not_before)
+        rec = self._record_for(dev, req)
+        self.quota.charge(req.tenant, rec.issue, rec.bytes_sent)
+        return dev
+
+    @staticmethod
+    def _record_for(dev: Device, req: LaunchRequest):
+        """The launch record ``req`` just produced on ``dev`` — matched by
+        (tenant, arrival), not ``launch_log[-1]``: a priority dispatch can
+        preempt a staged launch whose victim re-dispatches afterwards."""
+        for rec in reversed(dev.telemetry.launch_log):
+            if rec.tenant == req.tenant and rec.arrival == req.arrival_time:
+                return rec
+        raise AssertionError(
+            f"dispatched launch for {req.tenant!r} left no record on {dev.id}")
+
+    def _release_deferred(self, upto: float | None = None) -> None:
+        """Dispatch every parked launch whose release edge is ≤ ``upto``
+        (``None`` = all of them, the report()-time flush). A window that
+        filled up in the meantime (deferred siblings landed first) pushes
+        the launch to the next edge instead of overrunning the budget; each
+        window admits at least one launch, so the drain terminates."""
+        limit = float("inf") if upto is None else upto
+        while self._deferred and self._deferred[0][0] <= limit:
+            release, _, _, req = heapq.heappop(self._deferred)
+            actual = self.quota.release_time(req.tenant, release)
+            if actual > release:
+                self._defer(req, actual)
+                self.deferred_launches -= 1  # same launch, not a new deferral
+                continue
+            self._dispatch_charged(req, not_before=release)
+
+    def flush_deferred(self) -> None:
+        """Force every quota-deferred launch through at its release edge —
+        the closed-loop driver calls this when it must observe a deferred
+        launch's completion before the tenant's next step."""
+        if self.quota is not None:
+            self._release_deferred()
 
     # -- reporting -----------------------------------------------------------
 
     def report(self) -> SchedulerReport:
+        self.flush_deferred()
         return self.sched.finish()
 
     def port_utilization(self, makespan: float) -> float:

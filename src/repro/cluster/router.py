@@ -54,7 +54,7 @@ from typing import Iterable, Mapping, Sequence
 from ..fabric.link import LinkPort, resolve_link
 from ..sched.queue import ADMISSION_MODES, AdmissionQueue
 from ..sched.scheduler import LaunchRequest, arrival_order
-from .host import Host
+from .host import ConfigQuota, Host
 from .slo import ClusterReport, build_report
 
 ROUTERS = ("affinity", "round_robin", "jsq", "p2c")
@@ -164,7 +164,9 @@ class Cluster:
         staging_buffers: int = 2,
         transport: str = "auto",
         objective: str = "cycles",
+        compute_model=None,
         power=None,
+        quota=None,
         shared_port: bool = False,
         tracer=None,
     ) -> "Cluster":
@@ -182,13 +184,34 @@ class Cluster:
         :class:`~repro.power.model.PowerSpec` to every host's engine
         resources (observation-only joule metering) and ``objective``
         sets what "cheaper" means for the auto transport choice
-        (``cycles``/``joules``/``edp``); ``tracer`` attaches one
-        :class:`~repro.obs.trace.Tracer` across every host (each shard
+        (``cycles``/``joules``/``edp``); ``compute_model`` prices each
+        host's macro-ops (``None`` = the legacy flat per-launch constant,
+        ``"calibrated"`` = the fitted analytical model,
+        ``engine.costmodel``); ``quota`` caps per-tenant config bandwidth
+        at every host port — pass ``(bytes_per_window, window)`` or a
+        zero-arg factory returning a fresh
+        :class:`~repro.cluster.host.ConfigQuota`; quota accounting is
+        stateful, so each host gets its own instance; ``tracer`` attaches
+        one :class:`~repro.obs.trace.Tracer` across every host (each shard
         binds its host id into the spans it emits)."""
         port = None
         if shared_port:
             shared = resolve_link(link)
             port = LinkPort(shared, name=f"cfg[{shared.name}]:shared")
+
+        def host_quota() -> ConfigQuota | None:
+            if quota is None:
+                return None
+            if callable(quota):
+                return quota()
+            if isinstance(quota, ConfigQuota):
+                # a shared instance would pool windows across hosts;
+                # clone its parameters into per-host accounting instead
+                return ConfigQuota(quota.bytes_per_window, quota.window,
+                                   quota.budgets)
+            bytes_per_window, window = quota
+            return ConfigQuota(bytes_per_window, window)
+
         hosts = [
             Host.from_registry(f"h{i}", dict(counts), depth=depth,
                                max_contexts=max_contexts, policy=host_policy,
@@ -196,7 +219,9 @@ class Cluster:
                                overlap=overlap,
                                staging_buffers=staging_buffers,
                                transport=transport, objective=objective,
-                               power=power, port=port, tracer=tracer)
+                               compute_model=compute_model,
+                               power=power, quota=host_quota(), port=port,
+                               tracer=tracer)
             for i in range(n_hosts)
         ]
         return cls(hosts, policy=policy, seed=seed, sticky=sticky,
@@ -232,8 +257,11 @@ class Cluster:
         instead of only inside whichever host they landed on. Eligibility
         is by device kind, not routing policy: a sticky tenant's home may
         be busier than the admission clock suggests — stickiness binds
-        *placement*, while admission models the earliest capable port."""
-        assert order in ADMISSION_MODES, order
+        *placement*, while admission models the earliest capable port.
+        ``order="warm"`` is a single-scheduler feature (it needs a warmth
+        predicate bound to one device pool, ``Scheduler.run_open_loop``)
+        and is not accepted here."""
+        assert order in ("arrival", "edf"), order
         if order == "arrival":
             for req in sorted(requests, key=arrival_order):
                 self.dispatch(req)

@@ -36,6 +36,10 @@ class AcceleratorModel:
     launch_latency: float = 0.0  # fixed pipeline-fill cycles per macro-op
     # register names used to derive the macro-op size: ops = 2 * M * K * N
     dim_fields: tuple[str, str, str] = ("M", "K", "N")
+    # datapath tile (M, K, N): one grid step of the calibrated compute model
+    # covers one tile, so ⌈M/tm⌉·⌈K/tk⌉·⌈N/tn⌉ issue cycles price the loop
+    # control the flat macro_cycles model ignores (engine.costmodel)
+    tile: tuple[int, int, int] = (8, 8, 8)
 
     # -- derived quantities (the roofline inputs) ---------------------------
 
@@ -75,6 +79,7 @@ def gemmini_like() -> AcceleratorModel:
         launch_instrs=1,
         launch_latency=16.0,  # systolic fill
         dim_fields=("I", "K", "J"),
+        tile=(16, 16, 16),
     )
 
 

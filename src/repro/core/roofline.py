@@ -214,6 +214,39 @@ def decode_roofline_point(
     )
 
 
+def predicted_roofline_point(
+    name: str,
+    *,
+    ops: float,
+    config_bytes: float,
+    compute_cycles: float,
+    config_cycles: float,
+    p_peak: float,
+    concurrent: bool = True,
+) -> RooflinePoint:
+    """A *model-predicted* placement on the configuration roofline — no
+    run required. The calibrated analytical compute model
+    (``engine.costmodel``) predicts the kernel's compute cycles and the
+    fabric transport plan prices its config bytes; the steady-state launch
+    period is their ``max`` under concurrent configuration (config streams
+    behind compute) and their sum under sequential (the host is captive
+    through T_set, Eq. 3's serialization). The resulting point answers
+    "where *would* this shape land?" before any launch happens — the
+    what-if twin of :func:`host_roofline_point`, and the quantity the
+    overlap autotuner's wire/compute ratio is read off of."""
+    t_set = max(config_cycles, 1e-12)
+    period = max(compute_cycles, t_set) if concurrent \
+        else compute_cycles + t_set
+    bw = effective_config_bandwidth(config_bytes, 0.0, t_set)
+    return RooflinePoint(
+        name=name,
+        i_oc=ops / max(config_bytes, 1e-12),
+        performance=ops / period if period else 0.0,
+        p_peak=p_peak,
+        bw_config=bw,
+    )
+
+
 # --------------------------------------------------------------------------
 # the energy roofline — Eq. 4 along the joule axis
 # --------------------------------------------------------------------------

@@ -17,14 +17,30 @@ conservatively captive for the wire time of its own transfers and left the
   (pre-engine behavior, bit-exact) vs. overlapped (double-buffered async
   burst-DMA staging that releases the host at descriptor enqueue and hides
   the wire behind compute — the runtime twin of ``core.passes.overlap``).
+* :mod:`~repro.engine.costmodel` — :class:`ComputeModel`: calibrated
+  per-kernel-shape cycle prediction (issue + measured-overhead × work,
+  fitted against the real Pallas kernels; flat mode reproduces the old
+  per-launch constant bit-exactly).
+* :mod:`~repro.engine.autotune` — :func:`tune`: picks ``overlap`` and
+  ``staging_buffers`` from the predicted wire/compute ratio instead of
+  hand-tuning them per deployment.
 
 ``sched`` reserves through this layer, ``fabric.LinkPort`` exposes the wire
 as a :class:`Resource`, and ``cluster``/``bridge`` read the per-resource
 timelines back out as telemetry.
 """
 
-from . import overlap, resources
-from .overlap import OVERLAP_MODES, OverlapPolicy, StagePlan
+from . import autotune, costmodel, overlap, resources
+from .autotune import TunedKnobs, tune, tune_from_ratio
+from .costmodel import (
+    COMPUTE_MODES,
+    ComputeModel,
+    KernelFit,
+    fit_overhead,
+    load_fits,
+    resolve_compute_model,
+)
+from .overlap import ASYNC_XFER_MODES, OVERLAP_MODES, OverlapPolicy, StagePlan
 from .resources import (
     EngineResources,
     Interval,
@@ -34,14 +50,26 @@ from .resources import (
 )
 
 __all__ = [
+    "ASYNC_XFER_MODES",
+    "COMPUTE_MODES",
+    "ComputeModel",
     "EngineResources",
     "Interval",
+    "KernelFit",
     "OVERLAP_MODES",
     "OverlapPolicy",
     "Resource",
     "StagePlan",
+    "TunedKnobs",
+    "autotune",
+    "costmodel",
+    "fit_overhead",
+    "load_fits",
     "merge_intervals",
     "overlap",
     "overlap_cycles",
+    "resolve_compute_model",
     "resources",
+    "tune",
+    "tune_from_ratio",
 ]

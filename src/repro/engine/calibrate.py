@@ -1,0 +1,166 @@
+"""Calibration harness — fit overhead factors against real Pallas kernels.
+
+Times the actual kernels in ``repro.kernels`` (matmul, flash_attention,
+sampling) over a ladder of shapes, then least-squares-fits each kernel's
+measured wall-clock against the analytical ``issue + work`` terms of
+``engine.costmodel`` — the csl-experiments workflow: the model's *form* is
+analytical, its *overhead factor* is measured, never guessed.
+
+Run it where the kernels run::
+
+    PYTHONPATH=src python -m repro.engine.calibrate \
+        --backend pallas_interpret --out src/repro/engine/calibration.json
+
+and commit the JSON. CI and tests only ever *load* the committed fits
+(``costmodel.load_fits``) — timing happens here, once, not per test run,
+so the repo's numbers are deterministic on any machine.
+
+Interpret-mode wall-clock is a CPU emulation of the kernel's grid walk, so
+the fitted ``seconds_per_cycle`` is not a TPU cycle time — but the
+*overhead factor* (measured/ideal work ratio) is exactly the quantity the
+model form wants: how much the real grid loop, block fetches, and epilogue
+inflate the ideal datapath count. On real hardware the same harness
+re-fits with ``--backend pallas``."""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..core.accelerators import REGISTRY, AcceleratorModel
+from ..kernels import ops
+from .costmodel import (CALIBRATION_PATH, KERNELS, KernelFit, fit_overhead,
+                        save_fits)
+
+# shape ladders: (M, K, N) logical dims per costmodel.KERNELS semantics.
+# matmul blocks are 128-multiples (the kernel asserts divisibility);
+# flash_attention dims are (seq, head_dim, seq); sampling (batch, -, vocab).
+# Ladders deliberately stop before the CPU emulation's cache-spill cliff
+# (512³ matmul, 16×32k sampling go superlinear in wall-clock): a linear
+# cycle model should be calibrated in the regime it covers — the spill is
+# a property of the *emulator's* memory hierarchy, not of the kernels.
+SHAPES: dict[str, list[tuple[int, int, int]]] = {
+    "matmul": [
+        (128, 128, 128),
+        (256, 128, 128),
+        (128, 256, 128),
+        (128, 128, 256),
+        (256, 256, 256),
+        (384, 256, 384),
+    ],
+    "flash_attention": [
+        (128, 64, 128),
+        (256, 64, 256),
+        (384, 64, 384),
+        (512, 64, 512),
+        (256, 128, 256),
+    ],
+    "sampling": [
+        (4, 0, 1024),
+        (4, 0, 4096),
+        (8, 0, 4096),
+        (4, 0, 8192),
+        (8, 0, 8192),
+    ],
+}
+
+SMOKE_SHAPES = {k: v[:3] for k, v in SHAPES.items()}
+
+
+def _run_kernel(kernel: str, dims, backend: str):
+    """Build inputs for one logical shape and return a thunk running the
+    real kernel (jit-compiled; caller blocks on the result)."""
+    m, k, n = dims
+    key = jax.random.PRNGKey(m * 7 + k * 13 + n * 29)
+    if kernel == "matmul":
+        a = jax.random.normal(key, (m, k), jnp.float32)
+        b = jax.random.normal(key, (k, n), jnp.float32)
+        return lambda: ops.matmul_op(a, b, backend=backend)
+    if kernel == "flash_attention":
+        q, kk, v = (jax.random.normal(jax.random.fold_in(key, i),
+                                      (1, 1, m, k), jnp.float32)
+                    for i in range(3))
+        return lambda: ops.attention_op(q, kk, v, causal=False,
+                                        backend=backend)
+    if kernel == "sampling":
+        logits = jax.random.normal(key, (m, n), jnp.float32)
+        return lambda: ops.sample_op(logits, backend=backend)
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def time_kernel(kernel: str, dims, *, backend: str = "pallas_interpret",
+                repeats: int = 3) -> float:
+    """Median wall-clock seconds of one kernel execution at ``dims``.
+
+    One untimed warmup run absorbs jit tracing/compilation; each timed run
+    blocks on the result so device/async dispatch cannot hide."""
+    thunk = _run_kernel(kernel, dims, backend)
+    jax.block_until_ready(thunk())  # warmup: compile + first grid walk
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk())
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples)
+
+
+def calibrate_kernel(kernel: str, shapes, model: AcceleratorModel,
+                     *, backend: str = "pallas_interpret",
+                     repeats: int = 3) -> tuple[KernelFit, list]:
+    """Fit one kernel's overhead factor over its shape ladder; returns the
+    fit and the raw (dims, seconds) samples for the audit trail."""
+    spec = KERNELS[kernel]
+    issues, works, seconds, samples = [], [], [], []
+    for dims in shapes:
+        secs = time_kernel(kernel, dims, backend=backend, repeats=repeats)
+        issues.append(model.launch_latency + spec.steps(dims, model.tile))
+        works.append(spec.ops(dims) / model.p_peak)
+        seconds.append(secs)
+        samples.append({"dims": list(dims), "seconds": secs})
+    fit = fit_overhead(issues, works, seconds)
+    return KernelFit(kernel=kernel, overhead_factor=fit.overhead_factor,
+                     seconds_per_cycle=fit.seconds_per_cycle, r2=fit.r2,
+                     n_samples=fit.n_samples), samples
+
+
+def run_calibration(*, backend: str = "pallas_interpret",
+                    accel: str = "opengemm", repeats: int = 3,
+                    smoke: bool = False, verbose: bool = True):
+    """Time every kernel's ladder and fit its overhead factor."""
+    model = REGISTRY[accel]
+    shapes = SMOKE_SHAPES if smoke else SHAPES
+    fits, samples = {}, {}
+    for kernel in sorted(KERNELS):
+        fit, raw = calibrate_kernel(kernel, shapes[kernel], model,
+                                    backend=backend, repeats=repeats)
+        fits[kernel] = fit
+        samples[kernel] = raw
+        if verbose:
+            print(f"{kernel:>16}: overhead_factor={fit.overhead_factor:.4g} "
+                  f"sec/cycle={fit.seconds_per_cycle:.3g} "
+                  f"r2={fit.r2:.4f} n={fit.n_samples}")
+    return fits, samples
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="pallas_interpret",
+                    choices=ops.BACKENDS)
+    ap.add_argument("--accel", default="opengemm", choices=sorted(REGISTRY))
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short shape ladders (CI sanity, not for committing)")
+    ap.add_argument("--out", default=CALIBRATION_PATH)
+    args = ap.parse_args(argv)
+    fits, samples = run_calibration(backend=args.backend, accel=args.accel,
+                                    repeats=args.repeats, smoke=args.smoke)
+    save_fits(fits, args.out, backend=args.backend, samples=samples)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,13 @@ from .resources import Resource
 
 OVERLAP_MODES = ("serialized", "overlapped")
 
+# transfer disciplines that release the host before the wire completes:
+# burst DMA (descriptor enqueue, engine streams) and write-combined MMIO
+# (posted writes land in the link's write buffer and drain behind the
+# host). Plain MMIO is never here — ordered device stores complete
+# synchronously.
+ASYNC_XFER_MODES = ("burst", "wc")
+
 
 @dataclass(frozen=True)
 class StagePlan:
@@ -81,10 +88,11 @@ class OverlapPolicy:
     # -- queries --------------------------------------------------------------
 
     def is_async(self, concurrent: bool, xfer) -> bool:
-        """Would this transfer stream behind the host? Burst DMA onto a
-        concurrent-configuration device with actual wire time to hide."""
+        """Would this transfer stream behind the host? Burst DMA or posted
+        write-combining onto a concurrent-configuration device with actual
+        wire time to hide (:data:`ASYNC_XFER_MODES`)."""
         return (self.mode == "overlapped" and concurrent
-                and xfer.mode == "burst" and xfer.link_cycles > 0.0)
+                and xfer.mode in ASYNC_XFER_MODES and xfer.link_cycles > 0.0)
 
     def exposed_cost(self, concurrent: bool, xfer) -> float:
         """Host-visible cycles of this transfer — the placement-probe term.

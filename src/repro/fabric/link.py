@@ -38,6 +38,7 @@ the wire until it completes), and logs every transfer so
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
@@ -65,6 +66,11 @@ class LinkModel:
     mmio_write_energy: float = 0.0  # pJ per ordered register-write handshake
     byte_energy: float = 0.0  # pJ per payload byte streamed, either mode
     burst_setup_energy: float = 0.0  # pJ to build + launch one DMA descriptor
+    # posted-write combining depth: how many config writes the link's write
+    # buffer may coalesce into one transaction before it must drain. 0 (the
+    # default, every stock link) disables the "wc" transport discipline
+    # entirely, so existing MMIO numbers are reproduced bit-exactly.
+    wc_depth: int = 0
 
     def write_cycles(self, nbytes: float) -> float:
         """One ordered register write of ``nbytes`` crossing the link."""
@@ -82,6 +88,21 @@ class LinkModel:
         bursts = max(1, math.ceil(nbytes / self.max_burst))
         return bursts * (self.burst_setup + self.latency) + nbytes / self.bandwidth
 
+    def wc_cycles(self, n_writes: int, nbytes_per_write: float) -> float:
+        """``n_writes`` *posted* register writes through a write-combining
+        buffer: up to ``wc_depth`` consecutive writes coalesce into one
+        transaction, so the link latency is paid once per batch instead of
+        once per write, and the payload streams at link bandwidth — MMIO's
+        ordering cost partially amortized, the way burst DMA amortizes it
+        fully (no descriptor to program, but no deep bursts either)."""
+        assert self.wc_depth >= 2, \
+            f"link {self.name!r} has no write-combining buffer"
+        if n_writes <= 0:
+            return 0.0
+        batches = math.ceil(n_writes / self.wc_depth)
+        return (batches * self.latency
+                + n_writes * nbytes_per_write / self.bandwidth)
+
     def transfer_energy(self, mode: str, nbytes: float,
                         n_writes: int | None = None) -> float:
         """Wire energy (pJ) of moving ``nbytes`` in ``mode``. When the MMIO
@@ -97,6 +118,10 @@ class LinkModel:
             return bursts * self.burst_setup_energy + streamed
         if n_writes is None:
             n_writes = max(1, math.ceil(nbytes / self.max_burst))
+        if mode == "wc" and self.wc_depth >= 2:
+            # one handshake per coalesced batch, not per posted write
+            batches = max(1, math.ceil(n_writes / self.wc_depth))
+            return batches * self.mmio_write_energy + streamed
         return n_writes * self.mmio_write_energy + streamed
 
 
@@ -134,11 +159,23 @@ def pcie() -> LinkModel:
                      burst_setup_energy=400.0)
 
 
+def with_write_combining(link: LinkModel, depth: int = 8) -> LinkModel:
+    """The same link with an ``depth``-entry posted-write-combining buffer
+    (and a ``_wc`` name suffix). A separate constructor — not a default —
+    so every stock link keeps ``wc_depth=0`` and its committed transport
+    numbers stay bit-exact."""
+    assert depth >= 2, "a write-combining buffer needs ≥ 2 entries"
+    return dataclasses.replace(link, name=f"{link.name}_wc", wc_depth=depth)
+
+
 LINKS: dict[str, LinkModel] = {
     "csr": csr_local(),
     "noc": noc(),
     "noc2": noc(2),
     "pcie": pcie(),
+    # write-combining variants: same wire, an 8-deep posted-write buffer
+    "noc_wc": with_write_combining(noc()),
+    "pcie_wc": with_write_combining(pcie()),
 }
 
 
@@ -163,7 +200,7 @@ class Transfer:
     end: float
     nbytes: int
     tag: str  # tenant / purpose
-    mode: str  # "mmio" | "burst"
+    mode: str  # "mmio" | "burst" | "wc"
     energy: float = 0.0  # pJ this transfer burned on the wire
 
     @property

@@ -2,7 +2,7 @@
 
 ``sched.ConfigStateCache`` decides *what* must cross the host→device
 boundary (the delta of a launch's register file); this module decides
-*how*. Two disciplines compete, priced against one :class:`~.link.LinkModel`:
+*how*. Three disciplines compete, priced against one :class:`~.link.LinkModel`:
 
 * **MMIO** — the host issues one register write per config-write
   instruction, exactly the paper's §2 model: host cycles are
@@ -13,6 +13,11 @@ boundary (the delta of a launch's register file); this module decides
   local memory (~1 store per field, so host cycles shrink to
   ``(n_fields + launch_instrs) · host_cpi``) and a DMA engine streams the
   image in bursts, paying link latency once per burst instead of per write.
+* **Write-combined MMIO** (``"wc"``) — on links with a posted-write buffer
+  (``LinkModel.wc_depth ≥ 2``): the host issues the same per-register
+  writes, but the buffer coalesces up to ``wc_depth`` of them per
+  transaction, paying latency once per batch — between the other two, and
+  ``None`` (never chosen) on every stock link.
 
 :func:`plan_fields` picks whichever yields the smaller ``T_set``
 (host + wire) and reports both, so benchmarks can show the crossover: on a
@@ -31,7 +36,7 @@ from dataclasses import dataclass
 from ..core.accelerators import AcceleratorModel
 from .link import LinkModel
 
-MODES = ("mmio", "burst")
+MODES = ("mmio", "burst", "wc")
 
 # pJ one host control-thread cycle costs while issuing config instructions
 # — kept here (not on a PowerSpec) because the transport layer must price a
@@ -114,7 +119,36 @@ def burst_schedule(n_fields: int, model: AcceleratorModel,
     )
 
 
-TRANSPORTS = ("auto", "mmio", "burst")
+def wc_schedule(n_fields: int, model: AcceleratorModel,
+                link: LinkModel) -> TransferSchedule | None:
+    """Write-combined MMIO, or ``None`` on links without a posted-write
+    buffer (``wc_depth < 2`` — every stock link, so nothing changes unless
+    a ``*_wc`` link is chosen). The host issues the same per-register write
+    instructions as MMIO — combining happens in the link's write buffer,
+    not in software — but the wire coalesces up to ``wc_depth`` posted
+    writes per transaction, paying link latency once per batch: MMIO's
+    ordering cost partially amortized without programming a descriptor.
+    The launch write is posted too (it drains the final batch)."""
+    if link.wc_depth < 2:
+        return None
+    writes = -(-n_fields // model.fields_per_write) if n_fields else 0
+    host = (writes * model.instrs_per_write + model.launch_instrs) * model.host_cpi
+    payload = model.fields_per_write * model.bytes_per_field
+    nbytes = (n_fields + 1) * model.bytes_per_field
+    return TransferSchedule(
+        mode="wc",
+        link=link.name,
+        n_fields=n_fields,
+        nbytes=nbytes,
+        host_cycles=host,
+        link_cycles=link.wc_cycles(writes + 1, payload),
+        host_energy=host * HOST_ENERGY_PER_CYCLE,
+        # one handshake per coalesced batch; writes + 1 counts the launch
+        wire_energy=link.transfer_energy("wc", nbytes, n_writes=writes + 1),
+    )
+
+
+TRANSPORTS = ("auto", "mmio", "burst", "wc")
 
 # what "cheaper" means when mode="auto" compares the two disciplines:
 # cycles is the historical (and default) axis; joules and energy-delay
@@ -135,22 +169,29 @@ def plan_fields(n_fields: int, model: AcceleratorModel, link: LinkModel,
     """Price an ``n_fields``-register plan. ``mode="auto"`` (the default)
     picks the cheaper of MMIO and burst DMA under ``objective`` — cycles
     (``t_set``, the historical behaviour, default), joules (``energy``),
-    or ``edp`` — ties to MMIO: no descriptor to build. ``"mmio"`` forces
-    per-register writes (the paper's baseline discipline, and the doctor's
-    counterfactual knob); ``"burst"`` forces the DMA path, falling back to
-    MMIO on links without a DMA engine."""
+    or ``edp`` — ties break toward less machinery (MMIO over
+    write-combining over burst: no write buffer to drain, no descriptor to
+    build). ``"mmio"`` forces per-register writes (the paper's baseline
+    discipline, and the doctor's counterfactual knob); ``"burst"`` forces
+    the DMA path, falling back to MMIO on links without a DMA engine;
+    ``"wc"`` forces write-combined MMIO, falling back likewise on links
+    without a posted-write buffer."""
     assert mode in TRANSPORTS, mode
     assert objective in OBJECTIVES, objective
     mmio = mmio_schedule(n_fields, model, link)
     if mode == "mmio":
         return mmio
+    if mode == "wc":
+        return wc_schedule(n_fields, model, link) or mmio
     burst = burst_schedule(n_fields, model, link)
-    if burst is None:
-        return mmio
+    if mode == "burst":
+        return burst or mmio
     key = _OBJECTIVE_KEYS[objective]
-    if mode == "burst" or key(burst) < key(mmio):
-        return burst
-    return mmio
+    best = mmio
+    for cand in (wc_schedule(n_fields, model, link), burst):
+        if cand is not None and key(cand) < key(best):
+            best = cand
+    return best
 
 
 def plan_transfer(plan, model: AcceleratorModel, link: LinkModel,
@@ -175,3 +216,21 @@ def crossover_fields(model: AcceleratorModel, link: LinkModel,
         if key(burst_schedule(n, model, link)) < key(mmio_schedule(n, model, link)):
             return n
     return None
+
+
+def crossover_table(model: AcceleratorModel, link: LinkModel,
+                    limit: int = 256,
+                    objective: str = "cycles") -> list[tuple[int, str]]:
+    """Winning-discipline regimes of ``plan_fields(mode="auto")`` over plan
+    sizes 1..``limit``: ``[(n_start, mode), ...]``, one entry per regime
+    change. On a write-combining link the table typically reads
+    ``[(1, "wc"), (k, "burst")]`` — a few posted writes amortize latency
+    without a descriptor, deep register images still want DMA; on stock
+    links (``wc_depth=0``) the "wc" regime can never appear, which is the
+    bit-exactness guarantee in table form."""
+    table: list[tuple[int, str]] = []
+    for n in range(1, limit + 1):
+        mode = plan_fields(n, model, link, objective=objective).mode
+        if not table or table[-1][1] != mode:
+            table.append((n, mode))
+    return table

@@ -2,10 +2,11 @@
 
 **Admission** (:class:`AdmissionQueue`): the order in which an open-loop
 drain hands arrived requests to the scheduler — plain arrival order (ties
-to higher priority), or earliest-deadline-first over whatever has already
-arrived. EDF only reorders the *backlog*: with no backlog (or no deadlines
-set) it degrades to the priority-class order, so best-effort traffic is
-unaffected.
+to higher priority), earliest-deadline-first over whatever has already
+arrived, or cache-warmth-aware (``"warm"``: warm residents drain ahead of
+cold tenants, bounded by each cold request's deadline slack). EDF only
+reorders the *backlog*: with no backlog (or no deadlines set) it degrades
+to the priority-class order, so best-effort traffic is unaffected.
 
 **Staging** (:class:`LaunchQueue`): per-device dispatch timing.
 
@@ -45,7 +46,7 @@ from typing import Any, Iterable
 from ..core.accelerators import AcceleratorModel
 from ..engine.resources import Resource
 
-ADMISSION_MODES = ("arrival", "edf")
+ADMISSION_MODES = ("arrival", "edf", "warm")
 
 
 def arrival_order(req) -> tuple[float, int, str]:
@@ -73,11 +74,26 @@ class AdmissionQueue:
     higher priority). ``mode="edf"`` admits everything that has arrived by
     the host clock and pops the earliest deadline among it — under a
     backlog (e.g. a burst episode), tight-deadline requests overtake loose
-    ones they arrived behind."""
+    ones they arrived behind.
 
-    def __init__(self, requests: Iterable, mode: str = "arrival"):
+    ``mode="warm"`` is cache-warmth-aware admission: among arrived
+    requests, one whose tenant is *warm* (``warmth(req)`` — typically: a
+    device cache still holds its context, so its config bytes elide) is
+    admitted ahead of cold ones, letting a warm resident drain before a
+    cold tenant forces a context turnover. The deferral is bounded by each
+    cold request's deadline: once its slack (``deadline − now``) falls to
+    ``warm_slack`` or below it jumps ahead of every non-urgent request —
+    warmth batching must never buy config bytes with deadline misses.
+    Within a class (urgent / warm / cold), EDF order applies."""
+
+    def __init__(self, requests: Iterable, mode: str = "arrival", *,
+                 warmth=None, warm_slack: float = 0.0):
         assert mode in ADMISSION_MODES, mode
+        assert mode != "warm" or warmth is not None, \
+            "mode='warm' needs a warmth(req) predicate"
         self.mode = mode
+        self.warmth = warmth
+        self.warm_slack = warm_slack
         self._future = deque(sorted(requests, key=arrival_order))
         self._ready: list[tuple] = []  # heap of (edf key, seq, request)
         self._seq = itertools.count()
@@ -100,7 +116,27 @@ class AdmissionQueue:
             # the host is idle ahead of traffic: jump to the next arrival
             # instant and let everything landing there compete on deadline
             self._admit_until(self._future[0].arrival_time)
-        return heapq.heappop(self._ready)[-1]
+        if self.mode == "edf":
+            return heapq.heappop(self._ready)[-1]
+        return self._pop_warm(now)
+
+    def _pop_warm(self, now: float):
+        """Warmth-aware selection over the ready set: urgent (deadline
+        slack ≤ ``warm_slack``) beats warm beats cold, EDF order within a
+        class. A cold-only backlog drains in plain EDF order — warmth never
+        idles the host waiting for a warm arrival that isn't here."""
+        best_i = best_rank = None
+        for i, (key, seq, req) in enumerate(self._ready):
+            deadline = getattr(req, "deadline", None)
+            urgent = deadline is not None and deadline - now <= self.warm_slack
+            rank = (0 if urgent else 1,
+                    0 if self.warmth(req) else 1,
+                    key, seq)
+            if best_rank is None or rank < best_rank:
+                best_i, best_rank = i, rank
+        chosen = self._ready.pop(best_i)[-1]
+        heapq.heapify(self._ready)  # pop from the middle broke the heap
+        return chosen
 
 
 @dataclass(frozen=True)

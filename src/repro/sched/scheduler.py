@@ -44,6 +44,7 @@ from typing import Iterable, Sequence
 
 from ..core.accelerators import REGISTRY, AcceleratorModel
 from ..core.interp import Trace
+from ..engine.costmodel import resolve_compute_model
 from ..engine.overlap import OverlapPolicy
 from ..engine.resources import EngineResources, Resource
 from ..fabric.link import LinkModel, LinkPort, resolve_link
@@ -74,7 +75,12 @@ class LaunchRequest:
     request preempt lower-priority *staged* launches (``sched.queue``).
     ``deadline`` (absolute, host cycles) opts the request into EDF
     admission (``run_open_loop(order="edf")``); ``None`` means best
-    effort."""
+    effort.
+
+    ``kernel`` names the macro-op's kernel class for the calibrated
+    compute model (``engine.costmodel.KERNELS`` or an alias — the bridge
+    tags decode vs prefill); under the default flat model it is ignored,
+    so every pre-costmodel stream is priced unchanged."""
 
     tenant: str
     dims: tuple[int, int, int]  # logical (M, K, N); ops = 2·M·K·N
@@ -83,6 +89,7 @@ class LaunchRequest:
     arrival_time: float = 0.0
     priority: int = 0
     deadline: float | None = None
+    kernel: str = "matmul"
 
     def regs_for(self, model: AcceleratorModel) -> dict[str, int]:
         """Materialize the register file for a device kind — logical dims
@@ -133,11 +140,18 @@ class Scheduler:
         staging_buffers: int = 2,
         transport: str = "auto",
         objective: str = "cycles",
+        compute_model=None,
         power=None,
         port: LinkPort | None = None,
         tracer=None,
     ):
         assert policy in POLICIES, policy
+        # how macro-op compute time is priced: ``None`` (default) keeps the
+        # flat per-launch constant — ``AcceleratorModel.macro_cycles``,
+        # bit-exact with every committed number; "calibrated" (or a
+        # ``ComputeModel`` instance) prices each launch's kernel class and
+        # shape through the fitted analytical model (engine.costmodel)
+        self.compute_model = resolve_compute_model(compute_model)
         # transport discipline for config writes: "auto" lets the fabric
         # pick the cheaper of MMIO and burst DMA per plan; "mmio"/"burst"
         # force one side — the counterfactual knob obs.whatif validates
@@ -232,6 +246,14 @@ class Scheduler:
                 pool[f"{kind}:{i}"] = REGISTRY[kind]
         return cls(pool, **kwargs)
 
+    def _macro_cycles(self, dev: Device, regs: dict[str, int],
+                      kernel: str) -> float:
+        """One macro-op's compute duration on ``dev`` — the single seam the
+        compute model replaces: ``None`` is literally the legacy call."""
+        if self.compute_model is None:
+            return dev.model.macro_cycles(regs)
+        return self.compute_model.macro_cycles(dev.model, regs, kernel)
+
     # -- placement -----------------------------------------------------------
 
     def _candidates(self, req: LaunchRequest) -> list[Device]:
@@ -258,9 +280,23 @@ class Scheduler:
         cfg_c = self.overlap.exposed_cost(dev.model.concurrent, xfer)
         issue = self.host + cfg_c
         if dev.model.concurrent:
-            return cfg_c + dev.queue.admission_delay(issue), elided
+            delay = dev.queue.admission_delay(issue)
+            if self.overlap.is_async(dev.model.concurrent, xfer):
+                # overlap-aware placement: an async transfer releases the
+                # host early, but compute may not start before the register
+                # image lands (StagePlan.config_done) — and the wire's busy
+                # window can push that transfer back. Probe the wire the
+                # same way stage() would reserve it, so a device behind a
+                # backlogged link prices the gate it would actually impose
+                # on compute-start instead of looking free.
+                earliest = max(self.host + xfer.host_cycles,
+                               self.overlap.bank_free(dev.id))
+                done = self.port.res.when(earliest, xfer.link_cycles).end
+                delay = max(delay, done - issue)
+            return cfg_c + delay, elided
         start = max(issue, dev.queue.device_free)
-        return start + dev.model.macro_cycles(regs) - self.host, elided
+        return start + self._macro_cycles(dev, regs, req.kernel) - self.host, \
+            elided
 
     def _host_cost(self, dev: Device, req: LaunchRequest) -> float:
         return self._probe_device(dev, req)[0]
@@ -305,9 +341,14 @@ class Scheduler:
 
     # -- dispatch ------------------------------------------------------------
 
-    def dispatch(self, req: LaunchRequest) -> Device:
-        # open-loop admission: the host idles until the request exists
-        self.host = max(self.host, req.arrival_time)
+    def dispatch(self, req: LaunchRequest,
+                 not_before: float = 0.0) -> Device:
+        # open-loop admission: the host idles until the request exists.
+        # ``not_before`` is an externally-imposed release edge (a host-level
+        # config-bandwidth quota deferring the launch past its arrival) —
+        # the delay lands in this request's own queueing time, measured
+        # from its unchanged arrival_time.
+        self.host = max(self.host, req.arrival_time, not_before)
         dev = self.place(req)
         self._dispatch_on(dev, req)
         return dev
@@ -354,7 +395,8 @@ class Scheduler:
                   if stage.asynchronous else 0.0)
         exposed = cfg_c - hidden
         self.res.host.advance(stage.host_release)
-        timing = dev.queue.submit(self.host, dev.model.macro_cycles(regs),
+        timing = dev.queue.submit(self.host,
+                                  self._macro_cycles(dev, regs, req.kernel),
                                   priority=req.priority, token=req,
                                   ready=stage.config_done)
         self.host = timing.host_after
@@ -452,7 +494,8 @@ class Scheduler:
         return self.finish()
 
     def run_open_loop(self, requests: Iterable[LaunchRequest],
-                      *, order: str = "arrival") -> SchedulerReport:
+                      *, order: str = "arrival", warmth=None,
+                      warm_slack: float = 0.0) -> SchedulerReport:
         """Event-driven drain: requests are admitted in arrival order (ties
         go to higher priority), and the host clock idles forward whenever
         the next arrival is still in the future — queueing delay percentiles
@@ -461,11 +504,32 @@ class Scheduler:
         ``order="edf"`` re-orders the *backlog* earliest-deadline-first
         (requests without deadlines fall back to priority order): under
         bursts, tight-deadline launches overtake loose ones they arrived
-        behind, lowering deadline misses at equal work."""
-        queue = AdmissionQueue(requests, mode=order)
+        behind, lowering deadline misses at equal work.
+
+        ``order="warm"`` is cache-warmth-aware: a tenant whose context is
+        still resident in some device cache drains ahead of cold arrivals
+        (fewer context turnovers → fewer config bytes), bounded by each
+        cold request's deadline slack (``warm_slack`` cycles of margin).
+        ``warmth`` overrides the default predicate (any candidate device's
+        cache would elide bytes for this request)."""
+        if order == "warm" and warmth is None:
+            warmth = self._default_warmth
+        queue = AdmissionQueue(requests, mode=order, warmth=warmth,
+                               warm_slack=warm_slack)
         while len(queue):
             self.dispatch(queue.pop(self.host))
         return self.finish()
+
+    def _default_warmth(self, req: LaunchRequest) -> bool:
+        """Is some candidate device still warm for this request's tenant?
+        Pure: evaluates cache write-plans without dispatching them."""
+        if not self.cache_enabled:
+            return False
+        for dev in self._candidates(req):
+            plan = dev.cache.plan(req.tenant, req.regs_for(dev.model))
+            if plan.context_hit and plan.bytes_elided > 0:
+                return True
+        return False
 
     def finish(self) -> SchedulerReport:
         makespan = max([self.host, *(d.queue.device_free for d in self.devices)])
@@ -481,6 +545,8 @@ class Scheduler:
             overlap_mode=self.overlap.mode,
             staging_buffers=self.overlap.buffers,
             transport=self.transport,
+            compute_model=("flat" if self.compute_model is None
+                           else self.compute_model.mode),
             power=self.power,
             objective=self.objective,
             metrics=self.metrics,

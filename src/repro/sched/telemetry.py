@@ -412,6 +412,9 @@ class SchedulerReport:
     # under its *actual* configuration before flipping one knob
     staging_buffers: int = 2
     transport: str = "auto"
+    # how compute was priced: "flat" (the legacy per-launch constant) or
+    # "calibrated" (engine.costmodel predictions per kernel shape)
+    compute_model: str = "flat"
     # the run's repro.power.PowerSpec (None = cycle-only run) and the
     # transport objective, recorded so repro.power.meter can attribute a
     # report's joules offline and whatif can replay under the same spec
